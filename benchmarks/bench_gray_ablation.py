@@ -1,0 +1,63 @@
+"""Beyond-paper ablation: Gray-coded grid encoding for the bit-flip proposal.
+
+The paper raster-encodes sample values as plain binary, so a single-bit
+flip in a high bit jumps 2^k grid cells — long-range proposals that are
+mostly rejected on smooth targets.  Gray-coding the per-dimension fields
+(`GridCodec(gray=True)`) makes *every* single-bit flip move to an adjacent
+or power-of-two-near cell with a smoother distance profile, at zero
+hardware cost (the decode LUT changes, not the macro).
+
+Reported: acceptance rate and TV-vs-exact for binary vs Gray at matched
+chain budgets, on both paper workloads.  (Multi-bit pseudo-read flips at
+p_BFR=0.45 temper the effect — the chain is near-independence — so we
+also report a low-flip-rate variant (p=0.1) where proposal locality
+dominates; that regime is exactly the macro's CVDD≈0.65 V operating
+point.)
+"""
+
+import jax
+import numpy as np
+
+from repro.core import metropolis, targets
+
+
+def _run(density, codec, p_bfr: float, seed=0):
+    log_prob = targets.discretized_target(density, codec)
+    cfg = metropolis.MHConfig(nbits=codec.nbits, p_bfr=p_bfr, burn_in=300)
+    res = metropolis.run_chain(
+        jax.random.PRNGKey(seed), log_prob, cfg, n_samples=1500,
+        chain_shape=(64,),
+    )
+    counts = np.bincount(
+        np.asarray(res.samples).reshape(-1), minlength=1 << codec.nbits
+    )
+    emp = counts / counts.sum()
+    ref = targets.reference_grid_probs(density, codec)
+    tv = float(0.5 * np.abs(emp - ref).sum())
+    return tv, float(res.acceptance_rate)
+
+
+def run() -> list[dict]:
+    rows = []
+    gmm = targets.GaussianMixture.paper_gmm()
+    mgd = targets.MultivariateGaussian.paper_mgd()
+    cases = [
+        ("gmm_8bit", gmm, dict(nbits=8, dim=1, lo=(-10.0,), hi=(10.0,))),
+        ("mgd_12bit", mgd, dict(nbits=12, dim=2, lo=(-4.0, -4.0), hi=(4.0, 4.0))),
+    ]
+    for name, density, kw in cases:
+        for p_bfr in (0.45, 0.10):
+            for gray in (False, True):
+                codec = targets.GridCodec(gray=gray, **kw)
+                tv, acc = _run(density, codec, p_bfr)
+                rows.append(
+                    {
+                        "bench": "gray_code_ablation",
+                        "target": name,
+                        "p_bfr": p_bfr,
+                        "encoding": "gray" if gray else "binary (paper)",
+                        "tv_distance": round(tv, 4),
+                        "acceptance": round(acc, 3),
+                    }
+                )
+    return rows

@@ -1,0 +1,59 @@
+"""Kernel micro-benchmarks (interpret-mode CPU wall times + work rates).
+
+Interpret-mode timings validate plumbing, not TPU perf — the TPU-side
+story lives in the dry-run/roofline artifacts.  Reported here: us/call and
+debiased-bits/s (MSXOR) / chain-steps/s (fused MH) for three sizes each.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitcell
+from repro.kernels.mh import ops as mh_ops
+from repro.kernels.msxor import ops as msxor_ops
+
+
+def _time(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run() -> list[dict]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for m in (4096, 65536, 262144):
+        raw = jax.random.bits(key, (8, m), dtype=jnp.uint32)
+        dt = _time(msxor_ops.msxor_fold, raw)
+        rows.append(
+            {
+                "bench": "kernel_msxor",
+                "raw_words": f"8x{m}",
+                "us_per_call": round(dt * 1e6, 1),
+                "debiased_bits_per_s": f"{32 * m / dt:.3g}",
+            }
+        )
+    for b, c, k in ((1, 64, 64), (8, 256, 64), (16, 1024, 32)):
+        table = jax.random.normal(key, (b, 256), jnp.float32)
+        init = jnp.zeros((b, c), jnp.uint32)
+        rnd = mh_ops.generate_randomness(key, k, b, c, 0.45)
+
+        def call(t, i, f, u):
+            return mh_ops.mh_sample(t, i, f, u, nbits=8)
+
+        dt = _time(call, table, init, rnd.flips, rnd.u)
+        rows.append(
+            {
+                "bench": "kernel_mh_fused",
+                "shape": f"B{b}xC{c}xK{k}",
+                "us_per_call": round(dt * 1e6, 1),
+                "chain_steps_per_s": f"{b * c * k / dt:.3g}",
+            }
+        )
+    return rows

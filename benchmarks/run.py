@@ -1,0 +1,55 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Each module exposes ``run() -> list[dict]``; this driver executes them all
+and prints per-table key=value lines (machine-greppable, human-readable).
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run fig17      # name filter
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+MODULES = [
+    ("fig4_bfr", "benchmarks.table_fig4_bfr"),
+    ("fig9_msxor", "benchmarks.table_fig9_msxor"),
+    ("fig15_thermal", "benchmarks.table_fig15_thermal"),
+    ("fig16a_energy", "benchmarks.table_fig16_energy"),
+    ("fig16b_throughput", "benchmarks.table_fig16b_throughput"),
+    ("fig17_sampling", "benchmarks.table_fig17_sampling"),
+    ("kernels", "benchmarks.bench_kernels"),
+    ("sampler_quality", "benchmarks.bench_sampler_quality"),
+    ("token_sampler", "benchmarks.bench_token_sampler"),
+    ("gray_ablation", "benchmarks.bench_gray_ablation"),
+]
+
+
+def main() -> None:
+    flt = sys.argv[1] if len(sys.argv) > 1 else ""
+    failures = []
+    for name, modpath in MODULES:
+        if flt and flt not in name:
+            continue
+        print(f"\n=== {name} ({modpath}) ===")
+        t0 = time.time()
+        try:
+            mod = __import__(modpath, fromlist=["run"])
+            rows = mod.run()
+            for row in rows:
+                print("  " + "  ".join(f"{k}={v}" for k, v in row.items()))
+            print(f"  [{len(rows)} rows, {time.time() - t0:.1f}s]")
+        except Exception as e:  # keep the harness going; report at the end
+            import traceback
+
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+    if failures:
+        print("\nFAILED:", failures)
+        raise SystemExit(1)
+    print("\nall benchmarks completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Paper Fig. 16(a) + §6.4: per-operation energy and per-sample energy.
+
+Every number in the paper's energy section, derived from the calibrated
+model, side by side with the paper's quoted values.
+"""
+
+from repro.core import energy
+
+
+def run() -> list[dict]:
+    rows = [
+        {
+            "bench": "fig16a_op_energy",
+            "op": "write (4b)",
+            "model_fj": energy.E_WRITE_FJ_PER_4B,
+            "paper_fj": 372.6,
+        },
+        {
+            "bench": "fig16a_op_energy",
+            "op": "read (4b)",
+            "model_fj": energy.E_READ_FJ_PER_4B,
+            "paper_fj": 343.1,
+        },
+        {
+            "bench": "fig16a_op_energy",
+            "op": "block RNG (4b)",
+            "model_fj": energy.E_BLOCK_RNG_FJ_PER_4B,
+            "paper_fj": 79.1,
+        },
+        {
+            "bench": "fig16a_op_energy",
+            "op": "in-memory copy (4b)",
+            "model_fj": energy.E_COPY_FJ_PER_4B,
+            "paper_fj": 47.5,
+        },
+        {
+            "bench": "fig16a_op_energy",
+            "op": "[0,1] RNG (8b)",
+            "model_fj": energy.E_UNIFORM_RNG_FJ_PER_8B,
+            "paper_fj": 234.6,
+        },
+        {
+            "bench": "sec64_sample_energy",
+            "case": "accepted",
+            "model_pj": round(energy.energy_accepted_fj(4) / 1e3, 4),
+            "paper_pj": 0.5065,
+        },
+        {
+            "bench": "sec64_sample_energy",
+            "case": "rejected",
+            "model_pj": round(energy.energy_rejected_fj(4) / 1e3, 4),
+            "paper_pj": 0.5547,
+        },
+    ]
+    for ar in (0.30, 0.35, 0.40):
+        rows.append(
+            {
+                "bench": "sec64_sample_energy",
+                "case": f"acceptance {ar:.0%}",
+                "model_pj": round(energy.energy_per_sample_fj(ar, 4) / 1e3, 4),
+                "paper_pj": "0.5331-0.5402",
+            }
+        )
+    return rows

@@ -1,0 +1,29 @@
+"""Paper Fig. 16(b): throughput vs sample precision (4..64 bits).
+
+Checks the headline 166.7 M samples/s at 4-bit and the sub-2x slowdown per
+bit doubling (§6.5), plus the aggregate macro rate with 64 compartments.
+"""
+
+from repro.core import energy
+
+
+def run() -> list[dict]:
+    rows = []
+    prev = None
+    for nbits in (4, 8, 16, 32, 64):
+        per_chain = energy.throughput_per_chain(nbits)
+        rows.append(
+            {
+                "bench": "fig16b_throughput",
+                "nbits": nbits,
+                "iteration_ns": energy.iteration_time_ns(nbits),
+                "per_chain_samples_per_s": f"{per_chain:.4g}",
+                "macro_aggregate_per_s": f"{energy.throughput_aggregate(nbits):.4g}",
+                "slowdown_vs_half_bits": (
+                    round(prev / per_chain, 3) if prev else ""
+                ),
+                "paper_anchor": "166.7e6" if nbits == 4 else "",
+            }
+        )
+        prev = per_chain
+    return rows

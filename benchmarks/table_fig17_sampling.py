@@ -1,0 +1,129 @@
+"""Paper Fig. 17(c)/(d): GMM & MGD sampling — macro vs software baselines.
+
+Exactly the paper's experiment, scaled to this container:
+  * NumPy MH-MCMC (the paper's "NumPy on CPU" baseline) — measured live,
+  * JAX jit MH-MCMC (the paper's "JAX CPU" baseline) — measured live,
+  * the CIM macro — sample quality simulated through the behavioural model,
+    wall time derived from the calibrated 28 nm timing model (we cannot
+    tape out; the derivation is validated against §6.4/§6.5 in
+    table_fig16*), at the paper's fixed 32-bit sample width.
+
+Sample quality (TV distance on the discretisation grid) is reported for
+all three so the speedup is apples-to-apples at matched fidelity.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy, metropolis, targets
+from repro.core.macro import CIMMacro, MacroConfig
+
+N_SAMPLES = 100_000  # paper sweeps to 1e6; scaled for the CPU container
+
+
+def _numpy_mh(log_prob, nbits, n_samples, p_bfr=0.45, burn_in=500, seed=0):
+    rng = np.random.default_rng(seed)
+    state = int(rng.integers(0, 1 << nbits))
+    logp = log_prob(state)
+    out = np.empty(n_samples, dtype=np.uint32)
+    for i in range(n_samples + burn_in):
+        flips = rng.random(nbits) < p_bfr
+        mask = int(np.sum((1 << np.arange(nbits))[flips]))
+        cand = state ^ mask
+        logp_c = log_prob(cand)
+        if rng.random() < np.exp(min(0.0, logp_c - logp)):
+            state, logp = cand, logp_c
+        if i >= burn_in:
+            out[i - burn_in] = state
+    return out
+
+
+def _tv(samples, ref_probs, nbits):
+    counts = np.bincount(np.asarray(samples).reshape(-1), minlength=1 << nbits)
+    emp = counts / counts.sum()
+    return float(0.5 * np.abs(emp - ref_probs).sum())
+
+
+def _case(name, density, codec):
+    log_prob_jax = targets.discretized_target(density, codec)
+    ref = targets.reference_grid_probs(density, codec)
+    logp_table = np.log(np.maximum(ref, 1e-300))
+    rows = []
+
+    # --- NumPy baseline (scalar chain, the paper's slowest software case)
+    np_samples = min(N_SAMPLES, 20_000)  # NumPy is slow; scale + extrapolate
+    t0 = time.perf_counter()
+    s_np = _numpy_mh(lambda w: logp_table[w], codec.nbits, np_samples)
+    t_np = (time.perf_counter() - t0) * (N_SAMPLES / np_samples)
+    rows.append(
+        {
+            "bench": f"fig17_{name}",
+            "impl": "numpy_cpu",
+            "n_samples": N_SAMPLES,
+            "time_s": round(t_np, 4),
+            "samples_per_s": f"{N_SAMPLES / t_np:.3g}",
+            "tv_distance": round(_tv(s_np, ref, codec.nbits), 4),
+        }
+    )
+
+    # --- JAX jit baseline (vectorised chains, fair modern-software case)
+    cfg = metropolis.MHConfig(nbits=codec.nbits, burn_in=500)
+    n_chains = 64
+    per_chain = N_SAMPLES // n_chains
+    run = jax.jit(
+        lambda k: metropolis.run_chain(
+            k, log_prob_jax, cfg, n_samples=per_chain, chain_shape=(n_chains,)
+        ).samples
+    )
+    s_jax = run(jax.random.PRNGKey(0))
+    s_jax.block_until_ready()  # exclude compile
+    t0 = time.perf_counter()
+    s_jax = run(jax.random.PRNGKey(1))
+    s_jax.block_until_ready()
+    t_jax = time.perf_counter() - t0
+    rows.append(
+        {
+            "bench": f"fig17_{name}",
+            "impl": "jax_jit_cpu",
+            "n_samples": N_SAMPLES,
+            "time_s": round(t_jax, 4),
+            "samples_per_s": f"{N_SAMPLES / t_jax:.3g}",
+            "tv_distance": round(_tv(s_jax, ref, codec.nbits), 4),
+        }
+    )
+
+    # --- CIM macro: quality from the behavioural twin, time from the
+    # calibrated 28 nm model at 32-bit samples (paper's configuration)
+    macro = CIMMacro(MacroConfig(nbits=codec.nbits, burn_in=500))
+    words, stats = macro.sample(
+        jax.random.PRNGKey(2), log_prob_jax, n_samples=N_SAMPLES
+    )
+    t_macro = energy.time_for_samples_s(N_SAMPLES, nbits=32)
+    rows.append(
+        {
+            "bench": f"fig17_{name}",
+            "impl": "cim_macro_28nm",
+            "n_samples": N_SAMPLES,
+            "time_s": f"{t_macro:.3g}",
+            "samples_per_s": f"{N_SAMPLES / t_macro:.3g}",
+            "tv_distance": round(_tv(words, ref, codec.nbits), 4),
+            "acceptance": round(stats.acceptance_rate, 3),
+            "energy_pj_per_sample": round(stats.energy_per_sample_pj, 4),
+            "speedup_vs_numpy": f"{t_np / t_macro:.3g}",
+            "speedup_vs_jax": f"{t_jax / t_macro:.3g}",
+        }
+    )
+    return rows
+
+
+def run() -> list[dict]:
+    gmm = targets.GaussianMixture.paper_gmm()
+    gmm_codec = targets.GridCodec(nbits=8, dim=1, lo=(-10.0,), hi=(10.0,))
+    mgd = targets.MultivariateGaussian.paper_mgd()
+    mgd_codec = targets.GridCodec(
+        nbits=12, dim=2, lo=(-4.0, -4.0), hi=(4.0, 4.0)
+    )
+    return _case("gmm", gmm, gmm_codec) + _case("mgd", mgd, mgd_codec)

@@ -1,0 +1,69 @@
+"""Fault-tolerance demo: preempt a training run mid-flight and resume.
+
+Trains a small model, injects a simulated preemption (the SIGTERM path a
+cluster scheduler takes), restarts from the checkpoint, and verifies the
+combined loss trajectory is bit-exact vs an uninterrupted run — the
+property that makes 1000-node training restartable.
+
+Run:  PYTHONPATH=src python examples/fault_tolerant_training.py
+"""
+
+import shutil
+import tempfile
+
+import numpy as np
+
+from repro import configs
+from repro.distributed.fault import PreemptionHandler
+from repro.launch.train import TrainRun, run_training
+import repro.launch.train as train_mod
+
+
+def main():
+    cfg = configs.get_smoke_config("granite3_8b")
+    workdir = tempfile.mkdtemp(prefix="repro_ft_")
+    base = dict(
+        cfg=cfg, global_batch=8, seq_len=32, lr=1e-3, warmup=5,
+        ckpt_every=5, log_every=5,
+    )
+
+    print("== reference: 20 uninterrupted steps ==")
+    _, _, ref_losses = run_training(
+        TrainRun(steps=20, ckpt_dir=f"{workdir}/ref", **base)
+    )
+
+    print("\n== run A: preempted after step 9 (checkpoint at 10) ==")
+    handler = PreemptionHandler()
+    orig = train_mod.SyntheticTokenPipeline.host_batch
+    calls = {"n": 0}
+
+    def counting(self, step):
+        calls["n"] += 1
+        if calls["n"] == 10:
+            print("  [fault-injection] simulating SIGTERM (scheduler eviction)")
+            handler.simulate_preemption()
+        return orig(self, step)
+
+    train_mod.SyntheticTokenPipeline.host_batch = counting
+    try:
+        _, _, losses_a = run_training(
+            TrainRun(steps=20, ckpt_dir=f"{workdir}/ab", **base),
+            preemption=handler,
+        )
+    finally:
+        train_mod.SyntheticTokenPipeline.host_batch = orig
+    print(f"  stopped after {len(losses_a)} steps, checkpoint committed")
+
+    print("\n== run B: restart, auto-resume from the checkpoint ==")
+    _, _, losses_b = run_training(TrainRun(steps=20, ckpt_dir=f"{workdir}/ab", **base))
+
+    combined = losses_a + losses_b
+    drift = float(np.max(np.abs(np.array(combined) - np.array(ref_losses))))
+    print(f"\ncombined-vs-reference max |loss drift| = {drift:.3e}")
+    assert drift < 1e-5, "resume is not bit-exact!"
+    print("resume is bit-exact — preemption is recoverable.")
+    shutil.rmtree(workdir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    CheckpointManager,
+    CheckpointConfig,
+    latest_step,
+    load_checkpoint,
+    save_checkpoint,
+)

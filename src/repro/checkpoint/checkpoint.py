@@ -1,0 +1,214 @@
+"""Fault-tolerant, mesh-elastic checkpointing.
+
+Checkpoints are **logical**: every leaf is saved host-resident with its full
+logical shape + dtype under a flattened key path, with a JSON manifest
+carrying tree structure, shapes, sha256 integrity hashes, and the training
+step.  Restore is therefore independent of the mesh the checkpoint was
+written under — an elastic restart onto a different pod count / mesh shape
+re-shards via ``jax.device_put`` with the *new* shardings (ZeRO-1 state
+included, since it is just another pytree).
+
+Durability discipline:
+  * writes go to ``<dir>/step_<N>.tmp/`` then a single atomic
+    ``os.rename`` to ``step_<N>/`` — a crash mid-write never corrupts an
+    existing checkpoint and never leaves a readable-but-partial one.
+  * every array file is sha256-hashed into the manifest; ``load`` verifies
+    before deserialising (detects torn/bit-rotted files across restarts).
+  * ``retention`` keeps the newest K checkpoints (never the one being
+    written), deleting older ones only after the rename commits.
+  * optional async mode hands the (host-resident) arrays to a writer
+    thread so the train loop only blocks on device->host transfer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointConfig:
+    directory: str
+    retention: int = 3
+    async_save: bool = True
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    items = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        items.append((key, leaf))
+    return items, treedef
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def save_checkpoint(directory: str, step: int, tree, extra: dict | None = None):
+    """Atomic, integrity-hashed save of an arbitrary pytree.
+
+    Idempotent per step: a committed checkpoint for ``step`` is left
+    untouched (re-saving the same boundary, e.g. periodic + final save
+    coinciding, is a no-op rather than a torn rewrite).
+    """
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    if os.path.exists(os.path.join(final, "manifest.json")):
+        return final
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    items, treedef = _flatten_with_paths(tree)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "extra": extra or {},
+        "leaves": [],
+    }
+    for i, (key, leaf) in enumerate(items):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        fpath = os.path.join(tmp, fname)
+        np.save(fpath, arr, allow_pickle=False)
+        manifest["leaves"].append(
+            {
+                "key": key,
+                "file": fname,
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "sha256": _sha256(fpath),
+            }
+        )
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    os.replace(tmp, final)  # atomic commit
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            manifest = os.path.join(directory, name, "manifest.json")
+            if os.path.exists(manifest):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def load_checkpoint(
+    directory: str,
+    step: int,
+    like_tree,
+    shardings=None,
+    verify: bool = True,
+):
+    """Restore into the structure of ``like_tree``; reshard via shardings.
+
+    ``shardings`` may be a pytree of NamedSharding (elastic restore onto the
+    *current* mesh) or None (host/SingleDevice arrays).
+    """
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    items, treedef = _flatten_with_paths(like_tree)
+    by_key = {e["key"]: e for e in manifest["leaves"]}
+    leaves = []
+    shard_list = (
+        jax.tree.leaves(shardings) if shardings is not None else [None] * len(items)
+    )
+    for (key, like), sh in zip(items, shard_list):
+        entry = by_key.get(key)
+        if entry is None:
+            raise KeyError(f"checkpoint {path} is missing leaf {key!r}")
+        fpath = os.path.join(path, entry["file"])
+        if verify and _sha256(fpath) != entry["sha256"]:
+            raise IOError(f"integrity check failed for {fpath}")
+        arr = np.load(fpath, allow_pickle=False)
+        if list(arr.shape) != list(np.shape(like)):
+            raise ValueError(
+                f"leaf {key}: checkpoint shape {arr.shape} != expected "
+                f"{np.shape(like)} — config/checkpoint mismatch"
+            )
+        leaves.append(jax.device_put(arr, sh) if sh is not None else arr)
+    return jax.tree.unflatten(jax.tree.structure(like_tree), leaves), manifest
+
+
+class CheckpointManager:
+    """Retention + async writes + auto-resume."""
+
+    def __init__(self, cfg: CheckpointConfig):
+        self.cfg = cfg
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+        os.makedirs(cfg.directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, tree, extra: dict | None = None):
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        if self.cfg.async_save:
+            self.wait()  # one outstanding write at a time
+
+            def work():
+                try:
+                    save_checkpoint(self.cfg.directory, step, host_tree, extra)
+                    self._apply_retention()
+                except BaseException as e:  # surfaced on next wait()
+                    self._error = e
+
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            save_checkpoint(self.cfg.directory, step, host_tree, extra)
+            self._apply_retention()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _apply_retention(self):
+        steps = sorted(
+            int(n.split("_")[1])
+            for n in os.listdir(self.cfg.directory)
+            if n.startswith("step_") and not n.endswith(".tmp")
+        )
+        for s in steps[: -self.cfg.retention] if self.cfg.retention > 0 else []:
+            shutil.rmtree(
+                os.path.join(self.cfg.directory, f"step_{s:08d}"),
+                ignore_errors=True,
+            )
+
+    # -- restore --------------------------------------------------------------
+
+    def restore_latest(self, like_tree, shardings=None):
+        """(tree, step) from the newest valid checkpoint, or (None, None)."""
+        self.wait()
+        step = latest_step(self.cfg.directory)
+        if step is None:
+            return None, None
+        tree, _ = load_checkpoint(
+            self.cfg.directory, step, like_tree, shardings=shardings
+        )
+        return tree, step

@@ -1,0 +1,154 @@
+"""Behavioral model of 6T-SRAM bitcell stochasticity under "pseudo-read".
+
+The paper (§3.1, Fig. 4) lowers the bitcell supply CVDD while holding both
+bitlines high, collapsing the static noise margin so thermal noise flips the
+stored bit with a controllable probability ("bit flip rate", BFR).  Anchor
+points taken from the paper:
+
+  * normal read at CVDD = 0.8 V: BFR ~ 0 (stable storage),
+  * pseudo-read at CVDD = 0.6 V: BFR ~ 40 %  (§4.2: "p_BFR >= 0.4
+    corresponding to the case of CVDD is disturbed from 0.5V to 0.6V"),
+  * pseudo-read at CVDD = 0.5 V: BFR ~ 45 %  (§3.1),
+  * CVDD -> DRV: BFR -> 50 % (pure thermal noise).
+
+Fig. 15 temperature dependence at CVDD = 0.5 V: ~45 % flat over 0-70 C,
+mild decrease below -20 C (less thermal noise), mild increase toward 85 C.
+
+The exact analogue curve is foundry-confidential; we reproduce it as a
+monotone piecewise-linear interpolation through digitized anchors, which is
+sufficient for every downstream system property (all of which depend only on
+p_BFR being a known value in (0, 0.5]).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --- digitized anchors from paper figures -------------------------------
+
+# (CVDD [V], BFR) at nominal 25 C, pseudo-read conditions (Fig. 4(c)).
+_BFR_VS_CVDD = np.array(
+    [
+        (0.30, 0.499),
+        (0.40, 0.490),
+        (0.45, 0.475),
+        (0.50, 0.450),
+        (0.55, 0.425),
+        (0.60, 0.400),
+        (0.65, 0.300),
+        (0.70, 0.150),
+        (0.75, 0.030),
+        (0.80, 0.001),
+    ]
+)
+
+# (temperature [C], BFR) at CVDD = 0.5 V (Fig. 15).
+_BFR_VS_TEMP = np.array(
+    [
+        (-40.0, 0.360),
+        (-20.0, 0.420),
+        (0.0, 0.440),
+        (25.0, 0.450),
+        (70.0, 0.455),
+        (85.0, 0.460),
+    ]
+)
+
+NOMINAL_CVDD = 0.8  # V, standard bitcell supply
+PSEUDO_READ_CVDD = 0.5  # V, the paper's operating point
+NOMINAL_TEMP_C = 25.0
+
+
+def bfr_vs_cvdd(cvdd) -> jnp.ndarray:
+    """Bit flip rate of a pseudo-read at supply ``cvdd`` volts (25 C)."""
+    cvdd = jnp.asarray(cvdd)
+    return jnp.interp(
+        cvdd,
+        jnp.asarray(_BFR_VS_CVDD[:, 0]),
+        jnp.asarray(_BFR_VS_CVDD[:, 1]),
+        left=0.5,
+        right=0.0,
+    )
+
+
+def temperature_factor(temp_c) -> jnp.ndarray:
+    """Multiplicative thermal factor, normalised to 1.0 at 25 C."""
+    temp_c = jnp.asarray(temp_c)
+    base = jnp.interp(
+        jnp.asarray(NOMINAL_TEMP_C),
+        jnp.asarray(_BFR_VS_TEMP[:, 0]),
+        jnp.asarray(_BFR_VS_TEMP[:, 1]),
+    )
+    cur = jnp.interp(
+        temp_c,
+        jnp.asarray(_BFR_VS_TEMP[:, 0]),
+        jnp.asarray(_BFR_VS_TEMP[:, 1]),
+        left=float(_BFR_VS_TEMP[0, 1]),
+        right=float(_BFR_VS_TEMP[-1, 1]),
+    )
+    return cur / base
+
+
+def bit_flip_rate(cvdd=PSEUDO_READ_CVDD, temp_c=NOMINAL_TEMP_C) -> jnp.ndarray:
+    """p_BFR(CVDD, T) — clipped to the physically meaningful [0, 0.5]."""
+    p = bfr_vs_cvdd(cvdd) * temperature_factor(temp_c)
+    return jnp.clip(p, 0.0, 0.5)
+
+
+@dataclasses.dataclass(frozen=True)
+class BitcellConfig:
+    """Operating condition of the bitcell sub-array during pseudo-read."""
+
+    cvdd: float = PSEUDO_READ_CVDD
+    temp_c: float = NOMINAL_TEMP_C
+
+    @property
+    def p_bfr(self) -> float:
+        return float(bit_flip_rate(self.cvdd, self.temp_c))
+
+
+# --- pseudo-read operations ----------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("shape",))
+def pseudo_read_flip(key, stored_bits: jnp.ndarray, p_bfr, *, shape=None):
+    """Block-wise RNG pseudo-read: every selected bit flips w.p. ``p_bfr``.
+
+    This is the proposal generator (paper §3.2): applied to the bitcells that
+    hold the current sample x^(i), it yields the candidate x*.  The flip
+    events are i.i.d. per bit, giving the symmetric transfer matrix
+    q(y|x) = p^d(x,y) (1-p)^(k-d).
+    """
+    del shape
+    flips = jax.random.bernoulli(key, p_bfr, stored_bits.shape)
+    return jnp.bitwise_xor(stored_bits.astype(jnp.uint8), flips.astype(jnp.uint8))
+
+
+@partial(jax.jit, static_argnames=("shape",))
+def pseudo_read_fresh(key, p_bfr, *, shape):
+    """Reset-then-pseudo-read (paper §4.2 step 1+2): bits ~ Bernoulli(p_bfr).
+
+    The accurate-[0,1]-RNG module first flushes its bitcells to "0" so that
+    lambda_0 = p_BFR <= 0.5 is guaranteed (required by the MSXOR convergence
+    proof, paper Appendix A note).
+    """
+    return jax.random.bernoulli(key, p_bfr, shape).astype(jnp.uint8)
+
+
+def raw_random_words(key, p_bfr, shape, nbits: int = 32) -> jnp.ndarray:
+    """Biased random *words*: each of ``nbits`` bit-planes ~ Bernoulli(p_bfr).
+
+    Packs pseudo-read bits into uint32 words so the MSXOR kernels can debias
+    32 independent bit-streams per lane-op.  Bit i of the output word is an
+    independent Bernoulli(p_bfr) draw.
+    """
+    if not (0 < nbits <= 32):
+        raise ValueError(f"nbits must be in (0, 32], got {nbits}")
+    bits = jax.random.bernoulli(key, p_bfr, (*shape, nbits))
+    weights = (jnp.uint32(1) << jnp.arange(nbits, dtype=jnp.uint32)).astype(jnp.uint32)
+    return jnp.sum(bits.astype(jnp.uint32) * weights, axis=-1).astype(jnp.uint32)

@@ -1,0 +1,142 @@
+"""Vectorised Metropolis–Hastings engine — paper Algorithm 1 + §3.2.
+
+The chain state is a block of k-bit integer words, one word per compartment
+(the paper's macro runs 64 compartments in lock-step; here the compartment
+axis is an arbitrary batch shape).  Each step:
+
+  1. candidate = pseudo-read bit-flip of the current word  (block-wise RNG)
+  2. u ~ accurate [0,1] RNG                                 (MSXOR-debiased)
+  3. accept iff u < min(1, p(x*) / p(x)) — q cancels by symmetry (paper §3.2)
+  4. "in-memory copy": accepted candidates overwrite the state; rejected
+     compartments re-copy the previous value (costed in the energy model)
+
+Note: paper §4.2 contains the typo "if p(x^(i)) > u * p(x*) ... accept"; we
+implement the correct test from the paper's own Algorithm 1
+(u < p(x*)/p(x^(i))), see DESIGN.md §1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import proposal, uniform_rng
+
+Array = jnp.ndarray
+LogProbFn = Callable[[Array], Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class MHConfig:
+    nbits: int = 4                    # sample precision (paper: 4..32, up to 64)
+    p_bfr: float = 0.45               # proposal bit-flip rate (pseudo-read)
+    rng_p_bfr: float = 0.45           # [0,1]-RNG raw-bit bias
+    rng_stages: int = 3               # MSXOR stages
+    rng_bit_width: int = 16           # u precision (>=8; 16 tightens the
+                                      # accept test for peaked targets)
+    burn_in: int = 500                # paper §2.1: empirical 500-1000
+    thin: int = 1
+
+    def __post_init__(self):
+        if not 1 <= self.nbits <= 32:
+            raise ValueError(f"nbits must be in [1,32], got {self.nbits}")
+
+
+class MHStepState(NamedTuple):
+    words: Array          # (...,) uint32 current samples
+    log_prob: Array       # (...,) float32 cached log p(x)
+    accept_count: Array   # (...,) int32
+
+
+class MHResult(NamedTuple):
+    samples: Array        # (n_kept, ...) uint32
+    final: MHStepState
+    n_steps: jnp.int32
+    acceptance_rate: Array  # scalar float32
+
+
+def mh_step(key, state: MHStepState, log_prob_fn: LogProbFn, cfg: MHConfig):
+    """One MH iteration over the whole compartment block."""
+    k_prop, k_u = jax.random.split(key)
+    cand = proposal.propose_bitflip(k_prop, state.words, cfg.p_bfr, cfg.nbits)
+    logp_cand = log_prob_fn(cand)
+    u = uniform_rng.uniform(
+        k_u, state.words.shape, cfg.rng_p_bfr, cfg.rng_bit_width, cfg.rng_stages
+    )
+    delta = logp_cand - state.log_prob
+    # accept iff u < min(1, exp(delta)); u in [0,1) so delta >= 0 always accepts.
+    accept = u < jnp.exp(jnp.minimum(delta, 0.0))
+    # reject any candidate with log p = -inf (e.g. out-of-support words)
+    accept = jnp.logical_and(accept, jnp.isfinite(logp_cand))
+    new_words = jnp.where(accept, cand, state.words)          # in-memory copy
+    new_logp = jnp.where(accept, logp_cand, state.log_prob)
+    return MHStepState(
+        words=new_words,
+        log_prob=new_logp,
+        accept_count=state.accept_count + accept.astype(jnp.int32),
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnames=("log_prob_fn", "n_samples", "cfg", "chain_shape"),
+)
+def run_chain(
+    key,
+    log_prob_fn: LogProbFn,
+    cfg: MHConfig,
+    n_samples: int,
+    chain_shape: tuple = (),
+    init_words: Array | None = None,
+) -> MHResult:
+    """Run MH and keep ``n_samples`` post-burn-in (thinned) states per chain.
+
+    Total iterations = burn_in + n_samples * thin.  Samples are the *chain
+    states* after each kept step (MH output convention: a rejected step
+    re-emits the previous value — exactly the macro's re-copy behaviour).
+    """
+    if init_words is None:
+        k_init, key = jax.random.split(key)
+        init_words = jax.random.randint(
+            k_init, chain_shape, 0, 1 << cfg.nbits, dtype=jnp.uint32
+        )
+    else:
+        init_words = jnp.broadcast_to(init_words, chain_shape).astype(jnp.uint32)
+
+    init = MHStepState(
+        words=init_words,
+        log_prob=log_prob_fn(init_words).astype(jnp.float32),
+        accept_count=jnp.zeros(chain_shape, dtype=jnp.int32),
+    )
+
+    n_steps = cfg.burn_in + n_samples * cfg.thin
+
+    def body(state, step_key):
+        new_state = mh_step(step_key, state, log_prob_fn, cfg)
+        return new_state, new_state.words
+
+    keys = jax.random.split(key, n_steps)
+    final, all_words = jax.lax.scan(body, init, keys)
+
+    kept = all_words[cfg.burn_in :]
+    if cfg.thin > 1:
+        kept = kept[cfg.thin - 1 :: cfg.thin]
+
+    total = jnp.float32(n_steps) * jnp.float32(max(1, int(jnp.size(init.words))))
+    acc_rate = jnp.sum(final.accept_count).astype(jnp.float32) / total
+    return MHResult(
+        samples=kept,
+        final=final,
+        n_steps=jnp.int32(n_steps),
+        acceptance_rate=acc_rate,
+    )
+
+
+def effective_sample_count(result: MHResult) -> int:
+    return int(result.samples.shape[0]) * int(
+        max(1, jnp.size(result.samples[0]))
+    )

@@ -1,0 +1,95 @@
+"""Multi-stage XOR (MSXOR) debiasing — paper §4.2 + Appendix A.
+
+A raw pseudo-read bit is "1" with probability lambda_0 = p_BFR < 0.5.
+XOR-ing two i.i.d. biased bits gives a bit with
+    lambda_{n+1} = 2 * lambda_n * (1 - lambda_n),
+the logistic map whose fixed point on (0, 0.5] is 0.5.  Three stages
+(2^3 = 8 raw words folded into 1) suffice for p_BFR >= 0.4:
+lambda_3(0.4) = 0.49999872, i.e. |0.5 - lambda| = 1.28e-6 < 1e-5.
+
+The circuit folds *words*: 64 bitcells = 8 groups of 8-bit raw numbers
+R0^0..R0^7; each XOR stage pairs words bitwise (8 -> 4 -> 2 -> 1), producing
+the final debiased word R3[7:0].  We reproduce that exact dataflow, extended
+to arbitrary word widths (uint32 lanes on the TPU VPU).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_STAGES = 3  # paper: 3 stages adequate for p_BFR >= 0.4
+
+
+def lambda_recursion(p_bfr: float, n_stages: int) -> float:
+    """lambda_n after ``n_stages`` XOR stages (paper Fig. 9(d) analytics)."""
+    lam = float(p_bfr)
+    for _ in range(n_stages):
+        lam = 2.0 * lam * (1.0 - lam)
+    return lam
+
+
+def debias_error(p_bfr: float, n_stages: int) -> float:
+    """Distance from the uniform point, 0.5 - lambda_n (paper Fig. 9(d))."""
+    return 0.5 - lambda_recursion(p_bfr, n_stages)
+
+
+def required_stages(p_bfr: float, tol: float = 1e-5, max_stages: int = 16) -> int:
+    """Smallest stage count n with 0.5 - lambda_n <= tol."""
+    for n in range(max_stages + 1):
+        if debias_error(p_bfr, n) <= tol:
+            return n
+    raise ValueError(
+        f"p_bfr={p_bfr} cannot reach tol={tol} within {max_stages} stages"
+    )
+
+
+@partial(jax.jit, static_argnames=("n_stages", "axis"))
+def xor_fold(raw: jnp.ndarray, n_stages: int = DEFAULT_STAGES, axis: int = -2):
+    """Fold 2^n_stages raw words into one debiased word along ``axis``.
+
+    ``raw`` must have size 2^n_stages along ``axis``; integer dtype.  Each
+    stage XORs adjacent pairs, exactly mirroring the MSXOR gate tree.
+    """
+    if raw.shape[axis] != (1 << n_stages):
+        raise ValueError(
+            f"axis {axis} must have size 2**{n_stages}={1 << n_stages}, "
+            f"got shape {raw.shape}"
+        )
+    out = jnp.moveaxis(raw, axis, -1)
+    for _ in range(n_stages):
+        out = jnp.bitwise_xor(out[..., 0::2], out[..., 1::2])
+    return out[..., 0]
+
+
+@partial(jax.jit, static_argnames=("n_stages",))
+def debias_bits(raw_bits: jnp.ndarray, n_stages: int = DEFAULT_STAGES):
+    """Debias a trailing-axis group of raw *bit* arrays.
+
+    raw_bits: (..., 2^n_stages, W) uint8 in {0,1}  ->  (..., W) uint8.
+    """
+    return xor_fold(raw_bits, n_stages=n_stages, axis=-2)
+
+
+def pack_bits_to_uint(bits: jnp.ndarray, nbits: int) -> jnp.ndarray:
+    """(..., nbits) {0,1} -> (...,) uint32, bit 0 = least significant."""
+    if bits.shape[-1] != nbits:
+        raise ValueError(f"expected trailing dim {nbits}, got {bits.shape}")
+    weights = (jnp.uint32(1) << jnp.arange(nbits, dtype=jnp.uint32)).astype(jnp.uint32)
+    return jnp.sum(bits.astype(jnp.uint32) * weights, axis=-1).astype(jnp.uint32)
+
+
+def unpack_uint_to_bits(words: jnp.ndarray, nbits: int) -> jnp.ndarray:
+    """(...,) uint -> (..., nbits) uint8, bit 0 = least significant."""
+    shifts = jnp.arange(nbits, dtype=jnp.uint32)
+    return ((words[..., None].astype(jnp.uint32) >> shifts) & jnp.uint32(1)).astype(
+        jnp.uint8
+    )
+
+
+def empirical_lambda(bits: np.ndarray) -> float:
+    """Monte-Carlo estimate of P(bit = 1) for validation benchmarks."""
+    return float(np.asarray(bits, dtype=np.float64).mean())

@@ -1,0 +1,185 @@
+"""Target distributions p(x) for the MCMC benchmarks — paper §6.6, Fig. 17.
+
+The macro samples k-bit integer words; continuous targets are evaluated on a
+uniform grid over a box, with the word's bit-field split across dimensions
+(the paper's multi-bit words are raster-ordered the same way).  A Gray-code
+option is provided as a beyond-paper improvement: it makes single-bit flips
+move to *adjacent* grid cells, improving proposal locality at high bit
+widths (documented in EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+LogProbFn = Callable[[Array], Array]  # int words (...,) -> log p (...,)
+
+
+def binary_to_gray(x: Array) -> Array:
+    x = x.astype(jnp.uint32)
+    return jnp.bitwise_xor(x, x >> 1)
+
+
+def gray_to_binary(g: Array) -> Array:
+    g = g.astype(jnp.uint32)
+    b = g
+    for shift in (1, 2, 4, 8, 16):
+        b = jnp.bitwise_xor(b, b >> shift)
+    return b
+
+
+@dataclasses.dataclass(frozen=True)
+class GridCodec:
+    """Maps k-bit integer words <-> points in a [lo, hi]^dim box."""
+
+    nbits: int                       # total bits in the word
+    dim: int = 1
+    lo: tuple = (-8.0,)
+    hi: tuple = (8.0,)
+    gray: bool = False               # Gray-coded per-dimension fields
+
+    def __post_init__(self):
+        if self.nbits % self.dim != 0:
+            raise ValueError("nbits must divide evenly across dimensions")
+        if len(self.lo) != self.dim or len(self.hi) != self.dim:
+            raise ValueError("lo/hi must have length dim")
+
+    @property
+    def bits_per_dim(self) -> int:
+        return self.nbits // self.dim
+
+    @property
+    def levels(self) -> int:
+        return 1 << self.bits_per_dim
+
+    def decode(self, words: Array) -> Array:
+        """(...,) uint words -> (..., dim) float coordinates (cell centers)."""
+        b = self.bits_per_dim
+        mask = jnp.uint32((1 << b) - 1)
+        words = words.astype(jnp.uint32)
+        coords = []
+        for d in range(self.dim):
+            field = (words >> jnp.uint32(d * b)) & mask
+            if self.gray:
+                field = gray_to_binary(field) & mask
+            frac = (field.astype(jnp.float32) + 0.5) / jnp.float32(self.levels)
+            coords.append(self.lo[d] + frac * (self.hi[d] - self.lo[d]))
+        return jnp.stack(coords, axis=-1)
+
+    def encode(self, x: Array) -> Array:
+        """(..., dim) float -> (...,) uint words (nearest cell)."""
+        b = self.bits_per_dim
+        word = jnp.zeros(x.shape[:-1], dtype=jnp.uint32)
+        for d in range(self.dim):
+            frac = (x[..., d] - self.lo[d]) / (self.hi[d] - self.lo[d])
+            field = jnp.clip(
+                jnp.floor(frac * self.levels).astype(jnp.int32), 0, self.levels - 1
+            ).astype(jnp.uint32)
+            if self.gray:
+                field = binary_to_gray(field)
+            word = word | (field << jnp.uint32(d * b))
+        return word
+
+
+# --- continuous densities -------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GaussianMixture:
+    """Mixture of diagonal/full-covariance Gaussians (paper Fig. 17(a): 4 comps)."""
+
+    means: tuple            # (K, dim)
+    covs: tuple             # (K, dim, dim)
+    weights: tuple          # (K,)
+
+    @staticmethod
+    def paper_gmm() -> "GaussianMixture":
+        """A 4-component 1-D mixture matching Fig. 17(a)'s qualitative shape."""
+        means = ((-6.0,), (-2.0,), (2.0,), (6.0,))
+        covs = (((0.8,),), ((0.5,),), ((0.7,),), ((1.0,),))
+        weights = (0.2, 0.3, 0.3, 0.2)
+        return GaussianMixture(means, covs, weights)
+
+    def log_prob(self, x: Array) -> Array:
+        """x: (..., dim) -> (...,) log density."""
+        means = jnp.asarray(self.means)                 # (K, dim)
+        covs = jnp.asarray(self.covs)                   # (K, dim, dim)
+        weights = jnp.asarray(self.weights)             # (K,)
+        dim = means.shape[-1]
+        diff = x[..., None, :] - means                  # (..., K, dim)
+        prec = jnp.linalg.inv(covs)                     # (K, dim, dim)
+        maha = jnp.einsum("...ki,kij,...kj->...k", diff, prec, diff)
+        _, logdet = jnp.linalg.slogdet(covs)            # (K,)
+        log_comp = (
+            -0.5 * (maha + logdet + dim * jnp.log(2.0 * jnp.pi))
+            + jnp.log(weights)
+        )
+        return jax.scipy.special.logsumexp(log_comp, axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class MultivariateGaussian:
+    """Multivariate normal (paper Fig. 17(b): bivariate example)."""
+
+    mean: tuple
+    cov: tuple
+
+    @staticmethod
+    def paper_mgd() -> "MultivariateGaussian":
+        """Correlated bivariate Gaussian matching Fig. 17(b)'s heat map."""
+        return MultivariateGaussian(mean=(0.0, 0.0), cov=((1.0, 0.6), (0.6, 1.2)))
+
+    def log_prob(self, x: Array) -> Array:
+        mean = jnp.asarray(self.mean)
+        cov = jnp.asarray(self.cov)
+        dim = mean.shape[-1]
+        diff = x - mean
+        prec = jnp.linalg.inv(cov)
+        maha = jnp.einsum("...i,ij,...j->...", diff, prec, diff)
+        _, logdet = jnp.linalg.slogdet(cov)
+        return -0.5 * (maha + logdet + dim * jnp.log(2.0 * jnp.pi))
+
+
+# --- discrete word-space targets ------------------------------------------
+
+
+def discretized_target(density, codec: GridCodec) -> LogProbFn:
+    """log p over k-bit words = log density at the decoded grid point."""
+
+    def log_prob(words: Array) -> Array:
+        return density.log_prob(codec.decode(words))
+
+    return log_prob
+
+
+def table_target(log_prob_table: Array) -> LogProbFn:
+    """Target given as an explicit table over all 2^k words (or V logits)."""
+
+    table = jnp.asarray(log_prob_table)
+
+    def log_prob(words: Array) -> Array:
+        safe = jnp.clip(words.astype(jnp.int32), 0, table.shape[-1] - 1)
+        vals = table[safe]
+        in_range = words.astype(jnp.int32) < table.shape[-1]
+        return jnp.where(in_range, vals, -jnp.inf)
+
+    return log_prob
+
+
+def categorical_from_logits(logits: Array, temperature: float = 1.0) -> LogProbFn:
+    """Unnormalised categorical target — softmax-free (only ratios are used)."""
+    return table_target(jnp.asarray(logits) / temperature)
+
+
+def reference_grid_probs(density, codec: GridCodec) -> np.ndarray:
+    """Exact normalised cell probabilities on the codec grid (for TV tests)."""
+    words = jnp.arange(1 << codec.nbits, dtype=jnp.uint32)
+    logp = np.asarray(density.log_prob(codec.decode(words)), dtype=np.float64)
+    p = np.exp(logp - logp.max())
+    return p / p.sum()

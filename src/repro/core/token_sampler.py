@@ -1,0 +1,120 @@
+"""Softmax-free MCMC token sampling — the paper's technique in LLM decode.
+
+The next-token id is treated as a ceil(log2 V)-bit word.  The proposal flips
+each bit with p_BFR (the pseudo-read analogue); u comes from the MSXOR
+debiased uniform RNG; the accept test uses only the *logit difference*
+exp((l* - l)/T) — exactly the paper's alpha = p(x*)/p(x^(i)) simplification.
+No logsumexp over the vocabulary is ever computed.
+
+Out-of-vocab proposals (V is rarely a power of two) have p = 0 and are
+always rejected, which preserves detailed balance restricted to [0, V).
+
+Statistical behaviour: with p_BFR ~ 0.45 the proposal is a near-uniform
+independence sampler over the 2^k hypercube, so the chain mixes in O(1/p_max)
+steps for heavy-tailed targets and benefits from temperature warm-up for
+peaked ones.  ``n_steps`` and the top-k restriction (beyond-paper option)
+trade fidelity for latency; fidelity is quantified in
+benchmarks/bench_token_sampler.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import proposal, uniform_rng
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenSamplerConfig:
+    vocab_size: int
+    n_steps: int = 64                 # MH iterations per emitted token
+    p_bfr: float = 0.45
+    rng_bit_width: int = 24           # u precision (logit ratios can be tiny)
+    rng_stages: int = 3
+    temperature: float = 1.0
+    top_k: int = 0                    # 0 = full vocab (paper-faithful);
+                                      # >0 restricts the chain to top-k logits
+
+    @property
+    def nbits(self) -> int:
+        space = self.top_k if self.top_k > 0 else self.vocab_size
+        return max(1, math.ceil(math.log2(space)))
+
+
+class TokenSampleResult(NamedTuple):
+    tokens: Array            # (batch,) int32 sampled token ids
+    acceptance_rate: Array   # scalar float32
+    final_logp: Array        # (batch,) float32 unnormalised log-prob
+
+
+def _gather_logits(logits: Array, words: Array, vocab: int) -> Array:
+    """logits: (B, V), words: (B,) -> (B,) with -inf outside [0, V)."""
+    safe = jnp.clip(words.astype(jnp.int32), 0, vocab - 1)
+    vals = jnp.take_along_axis(logits, safe[:, None], axis=-1)[:, 0]
+    return jnp.where(words.astype(jnp.int32) < vocab, vals, -jnp.inf)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def sample_tokens(
+    key,
+    logits: Array,
+    cfg: TokenSamplerConfig,
+    init_tokens: Array | None = None,
+) -> TokenSampleResult:
+    """Draw one token per row of ``logits`` (B, V) via the CIM-MCMC chain.
+
+    ``init_tokens`` seeds each chain (e.g. the previous sampled token —
+    the macro's "initial value x^(0) written into the bitcells"); defaults
+    to the argmax, which guarantees a finite-logp start.
+    """
+    batch, vocab = logits.shape
+    if cfg.top_k > 0:
+        # beyond-paper: restrict the word space to the top-k logits
+        top_vals, top_idx = jax.lax.top_k(logits, cfg.top_k)
+        work_logits = top_vals / cfg.temperature
+        space = cfg.top_k
+    else:
+        top_idx = None
+        work_logits = logits / cfg.temperature
+        space = vocab
+
+    if init_tokens is None:
+        init_words = jnp.argmax(work_logits, axis=-1).astype(jnp.uint32)
+    else:
+        init_words = jnp.clip(init_tokens.astype(jnp.uint32), 0, space - 1)
+
+    init_logp = _gather_logits(work_logits, init_words, space)
+
+    def body(carry, step_key):
+        words, logp, acc = carry
+        k_prop, k_u = jax.random.split(step_key)
+        cand = proposal.propose_bitflip(k_prop, words, cfg.p_bfr, cfg.nbits)
+        logp_cand = _gather_logits(work_logits, cand, space)
+        u = uniform_rng.uniform(
+            k_u, words.shape, cfg.p_bfr, cfg.rng_bit_width, cfg.rng_stages
+        )
+        delta = logp_cand - logp
+        accept = jnp.logical_and(
+            u < jnp.exp(jnp.minimum(delta, 0.0)), jnp.isfinite(logp_cand)
+        )
+        words = jnp.where(accept, cand, words)
+        logp = jnp.where(accept, logp_cand, logp)
+        return (words, logp, acc + accept.astype(jnp.int32)), None
+
+    keys = jax.random.split(key, cfg.n_steps)
+    (words, logp, acc), _ = jax.lax.scan(body, (init_words, init_logp, jnp.zeros(batch, jnp.int32)), keys)
+
+    if top_idx is not None:
+        tokens = jnp.take_along_axis(top_idx, words.astype(jnp.int32)[:, None], axis=-1)[:, 0]
+    else:
+        tokens = words.astype(jnp.int32)
+    acc_rate = jnp.sum(acc).astype(jnp.float32) / jnp.float32(batch * cfg.n_steps)
+    return TokenSampleResult(tokens=tokens, acceptance_rate=acc_rate, final_logp=logp)

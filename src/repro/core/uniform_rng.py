@@ -1,0 +1,75 @@
+"""Accurate [0,1] RNG module — paper §4.2.
+
+Pipeline (mirrors the circuit):
+  1. reset the RNG sub-array bitcells to "0"            (guarantees lambda_0 <= 0.5)
+  2. pseudo-read -> raw bits ~ Bernoulli(p_BFR)          (biased)
+  3. MSXOR n-stage fold -> debiased bits (lambda_n ~ 0.5)
+  4. pack ``bit_width`` debiased bits into an integer R_n
+  5. u = R_n / 2^bit_width  in [0, 1)
+
+The paper's instance: 64 bitcells = 8 raw 8-bit words, 3 XOR stages, one
+8-bit output shared by all 64 compartments.  Here the module is vectorised:
+one call produces any batch shape of independent uniforms.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitcell, msxor
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformRNGConfig:
+    p_bfr: float = 0.45          # pseudo-read at CVDD=0.5 V, 25 C
+    n_stages: int = 3            # MSXOR stages (paper: 3 for p_BFR >= 0.4)
+    bit_width: int = 8           # output sample precision (paper: 8-bit)
+
+    def __post_init__(self):
+        if not 0.0 < self.p_bfr <= 0.5:
+            raise ValueError(f"p_bfr must be in (0, 0.5], got {self.p_bfr}")
+        if not 1 <= self.bit_width <= 32:
+            raise ValueError(f"bit_width must be in [1,32], got {self.bit_width}")
+
+    @property
+    def debias_error(self) -> float:
+        return msxor.debias_error(self.p_bfr, self.n_stages)
+
+
+@partial(jax.jit, static_argnames=("shape", "bit_width", "n_stages"))
+def uniform_words(key, shape, p_bfr, bit_width: int = 8, n_stages: int = 3):
+    """Debiased ``bit_width``-bit integers of the given batch ``shape``."""
+    raw = bitcell.pseudo_read_fresh(
+        key, p_bfr, shape=(*shape, 1 << n_stages, bit_width)
+    )
+    bits = msxor.debias_bits(raw, n_stages=n_stages)
+    return msxor.pack_bits_to_uint(bits, bit_width)
+
+
+@partial(jax.jit, static_argnames=("shape", "bit_width", "n_stages"))
+def uniform(key, shape, p_bfr, bit_width: int = 8, n_stages: int = 3):
+    """u ~ U[0,1) with per-bit bias |0.5 - lambda| = debias_error(p, n)."""
+    words = uniform_words(key, shape, p_bfr, bit_width, n_stages)
+    return words.astype(jnp.float32) / jnp.float32(1 << bit_width)
+
+
+class AccurateUniformRNG:
+    """Stateful convenience wrapper (splits its key per draw)."""
+
+    def __init__(self, key, config: UniformRNGConfig = UniformRNGConfig()):
+        self._key = key
+        self.config = config
+
+    def draw(self, shape=()):
+        self._key, sub = jax.random.split(self._key)
+        return uniform(
+            sub,
+            shape,
+            self.config.p_bfr,
+            self.config.bit_width,
+            self.config.n_stages,
+        )

@@ -1,0 +1,4 @@
+from repro.distributed import sharding  # noqa: F401
+from repro.distributed.hlo_analysis import collective_bytes  # noqa: F401
+from repro.distributed.straggler import StragglerWatchdog  # noqa: F401
+from repro.distributed.fault import PreemptionHandler  # noqa: F401

@@ -1,0 +1,99 @@
+"""Collective-traffic accounting from lowered/compiled HLO text.
+
+``cost_analysis()`` reports FLOPs and memory bytes but *not* collective
+bytes, so the roofline's third term is derived here: parse the (stable)
+HLO text for all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops and sum their operand sizes.
+
+Bytes convention (per participating device, which is what the ICI roofline
+term wants):
+  * all-reduce: operand bytes (ring: 2x(n-1)/n ~ 2x; we report raw operand
+    bytes and apply the algorithm factor in the roofline model)
+  * all-gather: output bytes - operand bytes received
+  * reduce-scatter: operand bytes - output sent
+  * all-to-all / collective-permute: operand bytes
+
+The parser reads shapes like ``bf16[16,512]{1,0}`` from op result/operand
+types; fusions never contain collectives, so top-level scanning suffices.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  %ar = bf16[16,512]{1,0} all-reduce(bf16[16,512]{1,0} %x), ...
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*?\)|[^=(]*?)\s*"
+    r"(all-reduce-start|all-gather-start|all-reduce|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)\b"
+    r"(.*)$"
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes per collective kind.
+
+    Returns {kind: bytes, ..., "total": bytes, "count": n_ops}.
+    """
+    out: dict = defaultdict(int)
+    count = 0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if m is None:
+            continue
+        result_type, op, rest = m.group(1), m.group(2), m.group(3)
+        kind = op.replace("-start", "")
+        # operand shapes appear inside the call parens in `rest`
+        operand_part = rest.split("(", 1)[-1]
+        # strip attributes after the closing paren of operands
+        depth, end = 1, len(operand_part)
+        for i, ch in enumerate(operand_part):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        op_bytes = _shape_bytes(operand_part[:end])
+        if op_bytes == 0:  # some forms put the shape only on the result
+            op_bytes = _shape_bytes(result_type)
+        out[kind] += op_bytes
+        count += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES if k in out)
+    out["count"] = count
+    return dict(out)

@@ -1,0 +1,116 @@
+"""Public jit'd wrappers for the fused MH kernel.
+
+``mh_sample`` is the raw kernel entry (randomness as operands).
+``mh_sample_with_rng`` generates the paper-faithful randomness — biased flip
+words from pseudo-read bit-planes, uniforms via the MSXOR kernel — and runs
+the fused chain.  ``sample_tokens_fused`` is the serving-path entry: one
+chain per batch row over that row's logits (softmax-free token sampling).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitcell
+from repro.kernels.mh.mh import mh_chain_pallas
+from repro.kernels.msxor import ops as msxor_ops
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def mh_sample(table, init, flips, u, nbits: int, block_c: int = 256):
+    """Pad the chain axis to a lane multiple and run the fused kernel."""
+    b, c = init.shape
+    bc = min(block_c, _round_up(c, 128))
+    c_pad = _round_up(c, bc)
+    if c_pad != c:
+        pad = c_pad - c
+        init = jnp.pad(init, ((0, 0), (0, pad)))
+        flips = jnp.pad(flips, ((0, 0), (0, 0), (0, pad)))
+        u = jnp.pad(u, ((0, 0), (0, 0), (0, pad)), constant_values=1.0)
+    samples, accept = mh_chain_pallas(
+        table, init, flips, u, nbits=nbits, block_c=bc, interpret=not _on_tpu()
+    )
+    return samples[:, :, :c], accept[:, :c]
+
+
+class MHRandomness(NamedTuple):
+    flips: jnp.ndarray  # (K, B, C) uint32 biased flip words
+    u: jnp.ndarray      # (K, B, C) float32 MSXOR-debiased uniforms
+
+
+def generate_randomness(
+    key,
+    n_steps: int,
+    batch: int,
+    chains: int,
+    p_bfr: float,
+    rng_stages: int = 3,
+) -> MHRandomness:
+    """Paper-faithful randomness: pseudo-read bit-planes + MSXOR uniforms."""
+    k_flip, k_u = jax.random.split(key)
+    flips = bitcell.raw_random_words(
+        k_flip, p_bfr, (n_steps, batch, chains), nbits=32
+    )
+    g = 1 << rng_stages
+    m = n_steps * batch * chains
+    raw_u = bitcell.raw_random_words(k_u, p_bfr, (g, m), nbits=32)
+    u = msxor_ops.msxor_uniform(raw_u, n_stages=rng_stages).reshape(
+        n_steps, batch, chains
+    )
+    return MHRandomness(flips=flips, u=u)
+
+
+def mh_sample_with_rng(
+    key,
+    table,
+    n_steps: int,
+    chains: int = 1,
+    p_bfr: float = 0.45,
+    rng_stages: int = 3,
+    init: jnp.ndarray | None = None,
+    nbits: int | None = None,
+):
+    """End-to-end fused sampling from a (B, V) log-prob table."""
+    b, vocab = table.shape
+    if nbits is None:
+        nbits = max(1, math.ceil(math.log2(vocab)))
+    if init is None:
+        init = jnp.broadcast_to(
+            jnp.argmax(table, axis=-1).astype(jnp.uint32)[:, None], (b, chains)
+        )
+    rnd = generate_randomness(key, n_steps, b, chains, p_bfr, rng_stages)
+    return mh_sample(table, init, rnd.flips, rnd.u, nbits=nbits)
+
+
+def sample_tokens_fused(
+    key,
+    logits,
+    n_steps: int = 64,
+    temperature: float = 1.0,
+    p_bfr: float = 0.45,
+    prev_tokens: jnp.ndarray | None = None,
+):
+    """Serving-path token sampler: one fused MH chain per batch row.
+
+    Returns (tokens (B,) int32, acceptance_rate scalar).
+    """
+    b = logits.shape[0]
+    table = logits.astype(jnp.float32) / temperature
+    init = None if prev_tokens is None else prev_tokens.astype(jnp.uint32)[:, None]
+    samples, accept = mh_sample_with_rng(
+        key, table, n_steps=n_steps, chains=1, p_bfr=p_bfr, init=init
+    )
+    tokens = samples[-1, :, 0].astype(jnp.int32)
+    acc_rate = jnp.sum(accept).astype(jnp.float32) / jnp.float32(b * n_steps)
+    return tokens, acc_rate

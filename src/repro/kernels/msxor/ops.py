@@ -1,0 +1,46 @@
+"""Public jit'd wrappers for the MSXOR kernel (padding + device dispatch)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.msxor.msxor import msxor_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def msxor_fold(raw: jnp.ndarray, n_stages: int = 3, block_m: int = 512):
+    """Debias raw biased words: (G, M) uint32 -> (M,) uint32.
+
+    Pads M up to a block multiple, dispatches the Pallas kernel (compiled on
+    TPU, interpret elsewhere), and strips the padding.
+    """
+    g, m = raw.shape
+    bm = min(block_m, _round_up(m, 128))
+    m_pad = _round_up(m, bm)
+    if m_pad != m:
+        raw = jnp.pad(raw, ((0, 0), (0, m_pad - m)))
+    out = msxor_pallas(
+        raw, n_stages=n_stages, block_m=bm, interpret=not _on_tpu()
+    )
+    return out[:m]
+
+
+def msxor_uniform(raw: jnp.ndarray, n_stages: int = 3, block_m: int = 512):
+    """Fused debias + uniform conversion: (G, M) uint32 -> (M,) float32."""
+    g, m = raw.shape
+    bm = min(block_m, _round_up(m, 128))
+    m_pad = _round_up(m, bm)
+    if m_pad != m:
+        raw = jnp.pad(raw, ((0, 0), (0, m_pad - m)))
+    out = msxor_pallas(
+        raw, n_stages=n_stages, to_uniform=True, block_m=bm, interpret=not _on_tpu()
+    )
+    return out[:m]
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult

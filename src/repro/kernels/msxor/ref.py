@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the MSXOR debias kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def msxor_fold_ref(raw: jnp.ndarray, n_stages: int) -> jnp.ndarray:
+    """raw: (G, M) uint32 with G == 2**n_stages -> (M,) uint32 debiased words.
+
+    Stage i XORs adjacent word pairs, exactly the paper's MSXOR gate tree
+    (Fig. 9(a)): 8 raw words R0^0..R0^7 -> 4 -> 2 -> 1.
+    """
+    if raw.shape[0] != (1 << n_stages):
+        raise ValueError(
+            f"leading dim must be 2**{n_stages}={1 << n_stages}, got {raw.shape}"
+        )
+    out = raw
+    for _ in range(n_stages):
+        out = jnp.bitwise_xor(out[0::2], out[1::2])
+    return out[0]
+
+
+def msxor_uniform_ref(raw: jnp.ndarray, n_stages: int) -> jnp.ndarray:
+    """Debiased words -> u in [0, 1): top 24 bits scaled by 2^-24."""
+    words = msxor_fold_ref(raw, n_stages)
+    return (words >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0**-24)

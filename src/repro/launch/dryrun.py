@@ -1,0 +1,346 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above run before ANY other import (jax locks the device
+count on first init).  512 placeholder host devices back both the
+single-pod (16,16) and the multi-pod (2,16,16) production meshes.
+
+Per cell this produces, into ``artifacts/dryrun/<mesh>/<arch>__<shape>.json``:
+  * ``memory_analysis``  — per-device argument/output/temp bytes (fits proof)
+  * ``cost_analysis``    — HLO FLOPs + bytes accessed (roofline terms 1+2)
+  * ``collectives``      — per-kind collective operand bytes parsed from the
+                           post-SPMD compiled HLO (roofline term 3)
+  * compile wall time, shardings summary, skip reasons.
+
+Usage:
+  python -m repro.launch.dryrun --all                      # 40 cells, 1 pod
+  python -m repro.launch.dryrun --all --multi-pod          # 40 cells, 2 pods
+  python -m repro.launch.dryrun --arch granite_34b --shape train_4k
+  python -m repro.launch.dryrun --arch qwen3_moe_30b --shape train_4k \
+      --mesh 32x8 --tag perf_iter1       # §Perf hillclimb variants
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.distributed.hlo_analysis import collective_bytes
+from repro.distributed.hlo_cost import analyze_hlo
+from repro.distributed.sharding import (
+    rules_for_config,
+    rules_with_zero,
+    spec_for,
+    tree_specs,
+    use_rules,
+)
+from repro.launch.mesh import alt_mesh, make_production_mesh, mesh_chip_count
+from repro.models import lm
+from repro.optim import AdamWConfig, adamw_init, opt_state_axes
+from repro.training.step import TrainStepConfig, make_train_step, make_decode_step, make_prefill_step
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun")
+
+
+def _save_hlo(hlo: str, cfg, shape_name: str, mesh_tag: str, variant: str) -> str:
+    import gzip
+
+    d = os.path.join(ARTIFACT_DIR, mesh_tag, "hlo")
+    os.makedirs(d, exist_ok=True)
+    name = f"{cfg.name.replace('/', '_')}__{shape_name}"
+    if variant != "baseline":
+        name += f"__{variant}"
+    path = os.path.join(d, name + ".hlo.gz")
+    with gzip.open(path, "wt") as f:
+        f.write(hlo)
+    return path
+
+
+def _named(mesh, spec):
+    from jax.sharding import NamedSharding
+
+    return NamedSharding(mesh, spec if spec is not None else jax.sharding.PartitionSpec())
+
+
+def _tree_shardings(mesh, axes_tree, shapes_tree, rules):
+    specs = tree_specs(axes_tree, rules, shapes_tree=shapes_tree, mesh=mesh)
+    return jax.tree.map(lambda s: _named(mesh, s), specs)
+
+
+def _batch_shardings(mesh, cfg, batch, rules):
+    logical = {
+        "tokens": ("batch", "seq"),
+        "labels": ("batch", "seq"),
+        "image_embeds": ("batch", "seq", None),
+        "frames": ("batch", "seq", None),
+    }
+    return {
+        k: _named(mesh, spec_for(logical[k], rules, shape=v.shape, mesh=mesh))
+        for k, v in batch.items()
+    }
+
+
+def lower_cell(
+    cfg,
+    shape_name: str,
+    mesh,
+    *,
+    variant: str = "baseline",
+    compress_pods: bool = False,
+    decode_sample: bool = False,
+):
+    """Lower+compile one cell; returns the artifact dict."""
+    shape = configs.SHAPES[shape_name]
+    rules = rules_for_config(cfg)
+    report: dict = {
+        "arch": cfg.name,
+        "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.axis_sizes),
+        "mesh_axes": list(mesh.axis_names),
+        "chips": mesh_chip_count(mesh),
+        "variant": variant,
+        "kind": shape.kind,
+        "param_count": cfg.param_count(),
+        "param_count_active": cfg.param_count(active_only=True),
+    }
+
+    with jax.set_mesh(mesh):
+        with use_rules(rules):
+            params_shapes, axes_tree = lm.abstract_params(cfg)
+            params_sh = _tree_shardings(mesh, axes_tree, params_shapes, rules)
+            batch = configs.batch_specs(cfg, shape)
+            batch_sh = _batch_shardings(mesh, cfg, batch, rules)
+
+            t0 = time.time()
+            if shape.kind == "train":
+                opt_cfg = AdamWConfig()
+                opt_shapes = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params_shapes)
+                opt_axes = opt_state_axes(params_shapes, axes_tree, opt_cfg)
+                opt_sh = _tree_shardings(
+                    mesh, opt_axes, opt_shapes, rules_with_zero(rules)
+                )
+                step_cfg = TrainStepConfig(
+                    n_micro=cfg.train_microbatches, compress_pods=compress_pods
+                )
+                step = make_train_step(
+                    cfg, axes_tree, opt_cfg, step_cfg=step_cfg, mesh=mesh
+                )
+                if compress_pods:
+                    err_shapes = jax.tree.map(
+                        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                        params_shapes,
+                    )
+                    jitted = jax.jit(
+                        step,
+                        in_shardings=(params_sh, opt_sh, batch_sh, params_sh),
+                    )
+                    lowered = jitted.lower(params_shapes, opt_shapes, batch, err_shapes)
+                else:
+                    jitted = jax.jit(
+                        step, in_shardings=(params_sh, opt_sh, batch_sh)
+                    )
+                    lowered = jitted.lower(params_shapes, opt_shapes, batch)
+            else:
+                cache = configs.cache_specs(cfg, shape)
+                cache_axes = lm.cache_axes(cfg)
+                cache_sh = _tree_shardings(mesh, cache_axes, cache, rules)
+                if shape.kind == "prefill":
+                    step = make_prefill_step(cfg)
+                    jitted = jax.jit(
+                        step,
+                        in_shardings=(params_sh, batch_sh, cache_sh),
+                        donate_argnums=(2,),
+                    )
+                    lowered = jitted.lower(params_shapes, batch, cache)
+                elif decode_sample:
+                    # the paper's technique fused into the decode step
+                    from repro.training.step import make_decode_sample_step
+
+                    step = make_decode_sample_step(cfg)
+                    key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+                    jitted = jax.jit(
+                        step,
+                        in_shardings=(
+                            params_sh,
+                            batch_sh["tokens"],
+                            cache_sh,
+                            _named(mesh, None),
+                        ),
+                        donate_argnums=(2,),
+                    )
+                    lowered = jitted.lower(
+                        params_shapes, batch["tokens"], cache, key_spec
+                    )
+                else:  # decode
+                    step = make_decode_step(cfg)
+                    jitted = jax.jit(
+                        step,
+                        in_shardings=(params_sh, batch_sh["tokens"], cache_sh),
+                        donate_argnums=(2,),
+                    )
+                    lowered = jitted.lower(params_shapes, batch["tokens"], cache)
+            t_lower = time.time() - t0
+
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        report["memory_analysis"] = {
+            "argument_size_bytes": mem.argument_size_in_bytes,
+            "output_size_bytes": mem.output_size_in_bytes,
+            "temp_size_bytes": mem.temp_size_in_bytes,
+            "alias_size_bytes": mem.alias_size_in_bytes,
+            "generated_code_bytes": mem.generated_code_size_in_bytes,
+        }
+        cost = compiled.cost_analysis() or {}
+        report["cost_analysis"] = {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        }
+        hlo = compiled.as_text()
+        report["collectives"] = collective_bytes(hlo)  # body-once (reference)
+        # loop-aware costs: while bodies multiplied by known trip counts —
+        # XLA's cost_analysis counts scan bodies once, useless for scanned
+        # layers (see repro.distributed.hlo_cost)
+        report["hlo_cost"] = analyze_hlo(hlo)
+        report["hlo_bytes"] = len(hlo)
+        report["hlo_gz"] = _save_hlo(hlo, cfg, shape_name, report["mesh"], variant)
+        report["lower_s"] = round(t_lower, 2)
+        report["compile_s"] = round(t_compile, 2)
+        report["status"] = "ok"
+        print(
+            f"[dryrun] {cfg.name} x {shape_name} x {report['mesh']} "
+            f"({variant}): OK  compile={t_compile:.1f}s "
+            f"flops={report['cost_analysis']['flops']:.3e} "
+            f"coll={report['collectives'].get('total', 0):.3e}B"
+        )
+        print(f"  memory_analysis: {mem}")           # proves it fits
+        print(f"  cost_analysis: flops={report['cost_analysis']['flops']:.4e} "
+              f"bytes={report['cost_analysis']['bytes_accessed']:.4e} "
+              f"(body-once; loop-aware: flops={report['hlo_cost']['flops']:.4e} "
+              f"bytes={report['hlo_cost']['bytes']:.4e} "
+              f"coll={report['hlo_cost']['collectives'].get('total', 0):.4e})")
+    return report
+
+
+def run_cell(arch: str, shape_name: str, mesh, variant="baseline", cfg=None, **kw):
+    cfg = cfg or configs.get_config(arch)
+    shape = configs.SHAPES[shape_name]
+    ok, reason = configs.shape_applicable(cfg, shape)
+    if not ok:
+        print(f"[dryrun] {arch} x {shape_name}: SKIP ({reason})")
+        return {
+            "arch": cfg.name,
+            "shape": shape_name,
+            "variant": variant,
+            "status": "skipped",
+            "reason": reason,
+        }
+    try:
+        return lower_cell(cfg, shape_name, mesh, variant=variant, **kw)
+    except Exception as e:  # a failing cell is a bug — surface it loudly
+        traceback.print_exc()
+        return {
+            "arch": cfg.name,
+            "shape": shape_name,
+            "variant": variant,
+            "status": "failed",
+            "error": f"{type(e).__name__}: {e}",
+        }
+
+
+def save_report(report: dict, mesh_tag: str, tag: str | None = None):
+    d = os.path.join(ARTIFACT_DIR, mesh_tag)
+    os.makedirs(d, exist_ok=True)
+    arch = report["arch"].replace("/", "_")
+    name = f"{arch}__{report['shape']}"
+    if tag:
+        name += f"__{tag}"
+    path = os.path.join(d, name + ".json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1)
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", help="arch id (see repro.configs.ARCH_IDS)")
+    ap.add_argument("--shape", help="shape name", choices=list(configs.SHAPES))
+    ap.add_argument("--all", action="store_true", help="run every assigned cell")
+    ap.add_argument("--multi-pod", action="store_true", help="use the (2,16,16) mesh")
+    ap.add_argument("--mesh", help="override mesh as DATAxMODEL, e.g. 32x8")
+    ap.add_argument("--compress-pods", action="store_true")
+    ap.add_argument("--tag", help="artifact filename suffix (perf iterations)")
+    ap.add_argument("--seq-shard", action="store_true", help="enable SP override")
+    # §Perf hillclimb levers
+    ap.add_argument("--n-micro", type=int, help="override train microbatches")
+    ap.add_argument("--capacity-factor", type=float, help="MoE capacity factor")
+    ap.add_argument("--cache-dtype", help="decode cache dtype (e.g. float8_e4m3fn)")
+    ap.add_argument("--remat", help="remat policy: nothing|dots|none")
+    ap.add_argument("--attn-causal-skip", action="store_true")
+    ap.add_argument("--logits-chunk", type=int)
+    ap.add_argument("--decode-sample", action="store_true",
+                    help="lower the MCMC-sampling decode step")
+    args = ap.parse_args()
+
+    if args.mesh:
+        data, model = (int(x) for x in args.mesh.split("x"))
+        mesh = alt_mesh(data, model, pods=2 if args.multi_pod else 1)
+        mesh_tag = ("pod2_" if args.multi_pod else "") + args.mesh
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        mesh_tag = "pod2_16x16" if args.multi_pod else "16x16"
+
+    cells = (
+        [(a, s) for a, s, _, _ in configs.assigned_cells()]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    n_ok = n_skip = n_fail = 0
+    for arch, shape in cells:
+        cfg = configs.get_config(arch)
+        patch = {}
+        if args.seq_shard:
+            patch["seq_shard"] = True
+        if args.n_micro:
+            patch["train_microbatches"] = args.n_micro
+        if args.capacity_factor:
+            patch["moe_capacity_factor"] = args.capacity_factor
+        if args.cache_dtype:
+            patch["cache_dtype_str"] = args.cache_dtype
+        if args.remat:
+            patch["remat_policy"] = args.remat
+        if args.attn_causal_skip:
+            patch["attn_causal_skip"] = True
+        if args.logits_chunk:
+            patch["logits_chunk"] = args.logits_chunk
+        if patch:
+            cfg = dataclasses.replace(cfg, **patch)
+        report = run_cell(
+            arch, shape, mesh,
+            variant=args.tag or "baseline",
+            cfg=cfg,
+            compress_pods=args.compress_pods,
+            decode_sample=args.decode_sample,
+        )
+        save_report(report, mesh_tag, tag=args.tag)
+        n_ok += report["status"] == "ok"
+        n_skip += report["status"] == "skipped"
+        n_fail += report["status"] == "failed"
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

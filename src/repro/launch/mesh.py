@@ -1,0 +1,45 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module never touches jax device state — required because the
+dry-run must set ``XLA_FLAGS`` *before* the first jax device query, and
+smoke tests must keep seeing 1 device.
+
+Meshes (assignment):
+  single-pod:  (16, 16)      axes ("data", "model")   = 256 chips
+  multi-pod:   (2, 16, 16)   axes ("pod", "data", "model") = 512 chips
+
+``alt_mesh`` builds §Perf-lever variants (e.g. (32, 8) to restore attention
+TP for 40/24/20-head archs) — same chip count, different axis split.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def alt_mesh(data: int, model: int, *, pods: int = 1):
+    """Same-chip-count §Perf variants, e.g. alt_mesh(32, 8)."""
+    if pods > 1:
+        return jax.make_mesh(
+            (pods, data, model),
+            ("pod", "data", "model"),
+            axis_types=(AxisType.Auto,) * 3,
+        )
+    return jax.make_mesh(
+        (data, model), ("data", "model"), axis_types=(AxisType.Auto,) * 2
+    )
+
+
+def mesh_chip_count(mesh) -> int:
+    n = 1
+    for s in mesh.axis_sizes:
+        n *= s
+    return n

@@ -1,0 +1,196 @@
+"""Roofline analysis over the dry-run artifacts (§Roofline deliverable).
+
+Per (arch x shape x mesh) cell, from the compiled artifact:
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s_per_chip
+  memory term     = HLO_bytes_per_device / HBM_bw_per_chip
+  collective term = effective_collective_bytes_per_device / ICI link bw
+
+``cost_analysis()`` numbers on the SPMD-partitioned module are already
+per-device.  Collective bytes come from the post-partitioning HLO operand
+sizes, with per-kind algorithm factors (ring all-reduce moves ~2x the
+payload; all-gather/reduce-scatter ~1x).
+
+Hardware constants (TPU v5e, per assignment):
+  197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = params (active for
+MoE), D = tokens processed per step; the ratio MODEL_FLOPS / global HLO
+FLOPs flags remat/redundancy waste (>1 is impossible; ~0.3 means 3x
+overhead from remat + attention + non-matmul work).
+
+Usage:
+  python -m repro.launch.roofline                 # 16x16 artifacts table
+  python -m repro.launch.roofline --mesh pod2_16x16
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12         # bf16 / chip
+HBM_BW = 819e9              # B/s / chip
+ICI_BW = 50e9               # B/s / link
+
+# effective bytes multipliers per collective kind (ring algorithms)
+ALGO_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+ARTIFACT_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun"
+)
+
+
+def effective_collective_bytes(coll: dict) -> float:
+    return sum(
+        coll.get(kind, 0) * fac for kind, fac in ALGO_FACTOR.items()
+    )
+
+
+def analyse(report: dict) -> dict:
+    """Attach roofline terms to one dry-run artifact.
+
+    Prefers the loop-aware HLO cost model (``hlo_cost``: while bodies
+    multiplied by trip counts); ``cost_analysis`` raw values remain in the
+    artifact as the body-once reference.
+    """
+    if report.get("status") != "ok":
+        return dict(report)
+    hc = report.get("hlo_cost")
+    if hc:
+        flops = hc["flops"]
+        bytes_acc = hc["bytes"]
+        bytes_upper = hc.get("bytes_upper", hc["bytes"])
+        coll_eff = effective_collective_bytes(hc.get("collectives", {}))
+    else:
+        flops = report["cost_analysis"]["flops"]
+        bytes_acc = report["cost_analysis"]["bytes_accessed"]
+        bytes_upper = bytes_acc
+        coll_eff = effective_collective_bytes(report.get("collectives", {}))
+    chips = report["chips"]
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_coll = coll_eff / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    # MODEL_FLOPS: useful math per step
+    n_params = (
+        report["param_count_active"]
+        if report["param_count_active"] != report["param_count"]
+        else report["param_count"]
+    )
+    kind = report["kind"]
+    shape = report["shape"]
+    seq = {"train_4k": 4096, "prefill_32k": 32768, "decode_32k": 1, "long_500k": 1}[
+        shape
+    ]
+    batch = {"train_4k": 256, "prefill_32k": 32, "decode_32k": 128, "long_500k": 1}[
+        shape
+    ]
+    tokens = seq * batch
+    mult = 6 if kind == "train" else 2
+    model_flops = mult * n_params * tokens
+    hlo_flops_global = flops * chips
+    useful = model_flops / hlo_flops_global if hlo_flops_global else 0.0
+
+    bound_time = max(terms.values())
+    out = dict(report)
+    out["roofline"] = {
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "memory_upper_s": bytes_upper / HBM_BW,
+        "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_flops_ratio": useful,
+        # fraction of roofline: useful work rate vs chip peak if running at
+        # the dominant-term time
+        "roofline_fraction": (
+            model_flops / chips / PEAK_FLOPS / bound_time if bound_time else 0.0
+        ),
+    }
+    return out
+
+
+def load_reports(mesh_tag: str, tag: str | None = None):
+    pat = os.path.join(ARTIFACT_DIR, mesh_tag, "*.json")
+    reports = []
+    for path in sorted(glob.glob(pat)):
+        base = os.path.basename(path)[: -len(".json")]
+        parts = base.split("__")
+        if tag is None and len(parts) > 2:
+            continue  # perf-iteration artifact, not baseline
+        if tag is not None and (len(parts) < 3 or parts[2] != tag):
+            continue
+        with open(path) as f:
+            reports.append(json.load(f))
+    return reports
+
+
+def table(reports) -> str:
+    rows = [
+        (
+            "arch",
+            "shape",
+            "dom",
+            "compute_ms",
+            "memory_ms",
+            "coll_ms",
+            "useful",
+            "roofline%",
+        )
+    ]
+    for r in reports:
+        a = analyse(r)
+        if a.get("status") != "ok":
+            rows.append((a["arch"], a["shape"], a.get("status"), "-", "-", "-", "-", "-"))
+            continue
+        rl = a["roofline"]
+        rows.append(
+            (
+                a["arch"],
+                a["shape"],
+                rl["dominant"][:4],
+                f"{rl['compute_s'] * 1e3:9.3f}",
+                f"{rl['memory_s'] * 1e3:9.3f}",
+                f"{rl['collective_s'] * 1e3:9.3f}",
+                f"{rl['useful_flops_ratio']:6.3f}",
+                f"{rl['roofline_fraction'] * 100:6.2f}",
+            )
+        )
+    widths = [max(len(str(r[i])) for r in rows) for i in range(len(rows[0]))]
+    lines = [
+        "  ".join(str(c).rjust(w) for c, w in zip(row, widths)) for row in rows
+    ]
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--tag", default=None)
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    reports = load_reports(args.mesh, args.tag)
+    if not reports:
+        print(f"no artifacts under {ARTIFACT_DIR}/{args.mesh}")
+        return
+    print(table(reports))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump([analyse(r) for r in reports], f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

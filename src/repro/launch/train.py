@@ -1,0 +1,169 @@
+"""Training driver: data -> train_step -> checkpoint, with fault tolerance.
+
+Runs end-to-end on CPU with smoke/small configs (the examples train a
+~100M-param model for a few hundred steps); the identical code path lowers
+onto the production meshes (the dry-run proves each arch compiles there).
+
+Fault tolerance in the loop:
+  * auto-resume from the latest valid checkpoint (mesh-elastic restore),
+  * SIGTERM/SIGINT -> checkpoint at the next step boundary, exit 0,
+  * periodic + final checkpoints (atomic, integrity-hashed, retained K),
+  * per-step wall-time watchdog feeding the straggler detector (single-host
+    here: flags log; a fleet launcher would re-slice data away),
+  * deterministic (seed, step) data — restart replays identical batches.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch hymba_1p5b --smoke \
+      --steps 50 --batch 8 --seq 64
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import CheckpointConfig, CheckpointManager
+from repro.data import DataConfig, SyntheticTokenPipeline
+from repro.distributed.fault import PreemptionHandler
+from repro.distributed.straggler import StragglerWatchdog
+from repro.models import lm
+from repro.optim import AdamWConfig, adamw_init, cosine_schedule
+from repro.training.step import TrainStepConfig, make_train_step
+
+
+@dataclasses.dataclass
+class TrainRun:
+    cfg: object
+    steps: int = 100
+    global_batch: int = 8
+    seq_len: int = 64
+    lr: float = 3e-4
+    warmup: int = 20
+    seed: int = 0
+    ckpt_dir: str | None = None
+    ckpt_every: int = 50
+    n_micro: int = 1
+    log_every: int = 10
+
+
+def run_training(run: TrainRun, preemption: PreemptionHandler | None = None):
+    cfg = run.cfg
+    key = jax.random.PRNGKey(run.seed)
+    vals, axes = lm.init_lm_values(key, cfg)
+    opt_cfg = AdamWConfig(lr=run.lr)
+    opt_state = adamw_init(vals, opt_cfg)
+
+    data = SyntheticTokenPipeline(
+        DataConfig(
+            vocab_size=cfg.vocab_size,
+            seq_len=run.seq_len,
+            global_batch=run.global_batch,
+            seed=run.seed,
+        )
+    )
+
+    schedule = lambda s: cosine_schedule(s, run.warmup, run.steps)  # noqa: E731
+    step_fn = jax.jit(
+        make_train_step(
+            cfg,
+            axes,
+            opt_cfg,
+            schedule_fn=schedule,
+            step_cfg=TrainStepConfig(n_micro=run.n_micro),
+        )
+    )
+
+    manager = None
+    start_step = 0
+    if run.ckpt_dir:
+        manager = CheckpointManager(
+            CheckpointConfig(directory=run.ckpt_dir, retention=3)
+        )
+        state = {"params": vals, "opt": opt_state}
+        restored, ck_step = manager.restore_latest(state)
+        if restored is not None:
+            vals, opt_state = restored["params"], restored["opt"]
+            start_step = ck_step
+            print(f"[train] resumed from step {start_step}")
+
+    watchdog = StragglerWatchdog(
+        n_hosts=1,
+        on_flag=lambda h, ema, med: print(
+            f"[train] WARN host {h} straggling: {ema:.3f}s vs median {med:.3f}s"
+        ),
+    )
+
+    losses = []
+    step = start_step
+    for step in range(start_step, run.steps):
+        batch = data.host_batch(step)
+        t0 = time.time()
+        vals, opt_state, metrics = step_fn(vals, opt_state, batch)
+        loss = float(metrics["loss"])
+        watchdog.record(0, time.time() - t0)
+        watchdog.check()
+        losses.append(loss)
+        if step % run.log_every == 0 or step == run.steps - 1:
+            print(
+                f"[train] step {step:5d} loss {loss:.4f} "
+                f"gnorm {float(metrics['grad_norm']):.3f} "
+                f"lr x{float(metrics['lr']):.2e} ({time.time() - t0:.2f}s)"
+            )
+        if manager and (step + 1) % run.ckpt_every == 0:
+            manager.save(step + 1, {"params": vals, "opt": opt_state})
+        if preemption is not None and preemption.preemption_requested:
+            print(f"[train] preemption requested — checkpointing at step {step + 1}")
+            if manager:
+                manager.save(step + 1, {"params": vals, "opt": opt_state})
+                manager.wait()
+            return vals, opt_state, losses
+    if manager:
+        manager.save(run.steps, {"params": vals, "opt": opt_state})
+        manager.wait()
+    return vals, opt_state, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="use the reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = (
+        configs.get_smoke_config(args.arch)
+        if args.smoke
+        else configs.get_config(args.arch)
+    )
+    handler = PreemptionHandler().install()
+    run = TrainRun(
+        cfg=cfg,
+        steps=args.steps,
+        global_batch=args.batch,
+        seq_len=args.seq,
+        lr=args.lr,
+        n_micro=args.n_micro,
+        ckpt_dir=args.ckpt_dir,
+        seed=args.seed,
+    )
+    _, _, losses = run_training(run, preemption=handler)
+    n = max(1, len(losses) // 10)
+    print(
+        f"[train] done: first-{n} mean loss {np.mean(losses[:n]):.4f} -> "
+        f"last-{n} mean loss {np.mean(losses[-n:]):.4f}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,388 @@
+"""Grouped-query attention with RoPE, sliding windows, and a blockwise
+(flash-style) softmax for long sequences.
+
+The blockwise path never materialises the full (Sq, Sk) score matrix: it
+scans query blocks (outer) and key/value blocks (inner) carrying the running
+max / normaliser / accumulator, bounding activation memory at
+O(block_q x block_kv) per head — required for the 32k prefill shapes to fit
+HBM at compile time.
+
+The sliding window is a *traced* per-layer scalar so heterogeneous layer
+stacks (e.g. Hymba's 3 global + 29 SWA layers) stay scan-over-layers
+compatible; masking is elementwise.  Baseline computes all KV blocks with
+masking (the familiar 2x causal overhead — see EXPERIMENTS.md §Perf for the
+block-skipping variant).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import layers
+from repro.models.layers import param, rms_norm, apply_rope, val
+
+NEG_INF = -1e30
+GLOBAL_WINDOW = jnp.int32(2**30)  # "no window" sentinel
+
+
+def init_attention(key, cfg, *, cross: bool = False):
+    """cfg needs: d_model, n_heads, n_kv_heads, d_head, dtype, qk_norm."""
+    keys = jax.random.split(key, 6)
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    dtype = cfg.param_dtype
+    p = {
+        "wq": param(keys[0], (d, h, dh), ("embed", "heads", "head_dim"), dtype),
+        "wk": param(keys[1], (d, kv, dh), ("embed", "kv_heads", "head_dim"), dtype),
+        "wv": param(keys[2], (d, kv, dh), ("embed", "kv_heads", "head_dim"), dtype),
+        "wo": param(keys[3], (h, dh, d), ("heads", "head_dim", "embed"), dtype),
+    }
+    if getattr(cfg, "qk_norm", False):
+        p["q_norm"] = param(keys[4], (dh,), ("head_dim",), dtype, mode="ones")
+        p["k_norm"] = param(keys[5], (dh,), ("head_dim",), dtype, mode="ones")
+    return p
+
+
+def _mask(q_pos, k_pos, window, causal: bool, sk_valid=None):
+    """q_pos: (bq,), k_pos: (bk,) -> (bq, bk) bool validity mask."""
+    valid = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if sk_valid is not None:
+        valid &= k_pos[None, :] < sk_valid  # key-side padding
+    if causal:
+        valid &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            valid &= (q_pos[:, None] - k_pos[None, :]) < window
+    return valid
+
+
+def _attend_block(q, k, v, mask, scale):
+    """q: (B,KV,R,bq,dh) k/v: (B,KV,bk,dh) mask: (bq,bk) -> (scores-free flash piece)."""
+    s = jnp.einsum(
+        "bkrqd,bksd->bkrqs", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    return s
+
+
+def flash_attention(
+    q, k, v, *, causal: bool, window, q_offset, block_q: int, block_kv: int,
+    unroll_causal_skip: bool = False,
+):
+    """Blockwise softmax attention.
+
+    q: (B, Sq, KV, R, dh); k, v: (B, Sk, KV, dh).  window may be None, a
+    python int, or a traced scalar.  q_offset is the absolute position of
+    q[.,0] (for decode/chunked prefill).  Returns (B, Sq, KV, R, dh).
+    """
+    b, sq, kvh, r, dh = q.shape
+    sk = k.shape[1]
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, sk)
+    sq_orig, sk_orig = sq, sk
+    # pad seq dims to block multiples; padded keys are masked, padded query
+    # rows are sliced off the output
+    if sq % block_q:
+        pad = block_q - sq % block_q
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        sq += pad
+    if sk % block_kv:
+        pad = block_kv - sk % block_kv
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        sk += pad
+    sk_valid = sk_orig if sk != sk_orig else None
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+
+    qb = jnp.moveaxis(
+        q.reshape(b, sq // block_q, block_q, kvh, r, dh), 1, 0
+    )  # (nq, B, bq, KV, R, dh)
+    kb = jnp.moveaxis(k.reshape(b, sk // block_kv, block_kv, kvh, dh), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, sk // block_kv, block_kv, kvh, dh), 1, 0)
+
+    nq, nk = sq // block_q, sk // block_kv
+
+    def q_block(qi, q_i):
+        # q_i: (B, bq, KV, R, dh) -> transpose for einsum
+        qt = jnp.moveaxis(q_i, 1, 3)  # (B, KV, R, bq, dh)
+        q_pos = q_offset + qi * block_q + jnp.arange(block_q)
+
+        def kv_step(carry, inputs):
+            m_run, l_run, acc = carry
+            kj, k_j, v_j = inputs
+            kt = jnp.moveaxis(k_j, 1, 2)  # (B, KV, bk, dh)
+            vt = jnp.moveaxis(v_j, 1, 2)
+            k_pos = kj * block_kv + jnp.arange(block_kv)
+            mask = _mask(q_pos, k_pos, window, causal, sk_valid)
+            s = _attend_block(qt, kt, vt, mask, scale)  # (B,KV,R,bq,bk) f32
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            correction = jnp.exp(m_run - m_new)
+            l_new = l_run * correction + p.sum(axis=-1)
+            acc = acc * correction[..., None] + jnp.einsum(
+                "bkrqs,bksd->bkrqd", p.astype(vt.dtype), vt,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc), None
+
+        init = (
+            jnp.full((b, kvh, r, block_q), NEG_INF, jnp.float32),
+            jnp.zeros((b, kvh, r, block_q), jnp.float32),
+            jnp.zeros((b, kvh, r, block_q, dh), jnp.float32),
+        )
+        (m_run, l_run, acc), _ = jax.lax.scan(
+            kv_step, init, (jnp.arange(nk), kb, vb)
+        )
+        out = acc / jnp.maximum(l_run, 1e-30)[..., None]
+        return jnp.moveaxis(out, 3, 1)  # (B, bq, KV, R, dh)
+
+    if unroll_causal_skip and causal and window is None:
+        # beyond-paper §Perf lever: python-unrolled q blocks with *static*
+        # per-block KV extent — true causal FLOP skipping (~2x on attention).
+        outs = []
+        for qi in range(nq):
+            hi = min(nk, (qi * block_q + block_q + block_kv - 1) // block_kv)
+            sub_k, sub_v = kb[:hi], vb[:hi]
+
+            def q_block_static(qi=qi, sub_k=sub_k, sub_v=sub_v):
+                qt = jnp.moveaxis(qb[qi], 1, 3)
+                q_pos = q_offset + qi * block_q + jnp.arange(block_q)
+
+                def kv_step(carry, inputs):
+                    m_run, l_run, acc = carry
+                    kj, k_j, v_j = inputs
+                    kt = jnp.moveaxis(k_j, 1, 2)
+                    vt = jnp.moveaxis(v_j, 1, 2)
+                    k_pos = kj * block_kv + jnp.arange(block_kv)
+                    mask = _mask(q_pos, k_pos, None, True)
+                    s = _attend_block(qt, kt, vt, mask, scale)
+                    m_new = jnp.maximum(m_run, s.max(axis=-1))
+                    p = jnp.exp(s - m_new[..., None])
+                    corr = jnp.exp(m_run - m_new)
+                    l_new = l_run * corr + p.sum(axis=-1)
+                    acc2 = acc * corr[..., None] + jnp.einsum(
+                        "bkrqs,bksd->bkrqd", p.astype(vt.dtype), vt,
+                        preferred_element_type=jnp.float32,
+                    )
+                    return (m_new, l_new, acc2), None
+
+                init = (
+                    jnp.full((b, kvh, r, block_q), NEG_INF, jnp.float32),
+                    jnp.zeros((b, kvh, r, block_q), jnp.float32),
+                    jnp.zeros((b, kvh, r, block_q, dh), jnp.float32),
+                )
+                (m_run, l_run, acc), _ = jax.lax.scan(
+                    kv_step, init, (jnp.arange(hi), sub_k, sub_v)
+                )
+                out = acc / jnp.maximum(l_run, 1e-30)[..., None]
+                return jnp.moveaxis(out, 3, 1)
+
+            outs.append(q_block_static())
+        out = jnp.concatenate(outs, axis=1)
+        return out[:, :sq_orig].astype(q.dtype)
+
+    out = jax.lax.map(lambda args: q_block(*args), (jnp.arange(nq), qb))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, sq, kvh, r, dh)
+    return out[:, :sq_orig].astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, *, index, window):
+    """Single-token attention against a (B, Smax, KV, dh) cache.
+
+    q: (B, 1, KV, R, dh); index = number of valid cache entries (q is at
+    position index - 1 ... the cache already contains this step's k/v).
+    """
+    b, _, kvh, r, dh = q.shape
+    smax = k_cache.shape[1]
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    qt = q[:, 0]  # (B, KV, R, dh)
+    pos = jnp.arange(smax)
+    q_pos = index - 1
+    valid = pos < index
+    if window is not None:
+        valid &= (q_pos - pos) < window
+    s = jnp.einsum(
+        "bkrd,bskd->bkrs", qt, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bkrs,bskd->bkrd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out[:, None].astype(q.dtype)  # (B, 1, KV, R, dh)
+
+
+def _gqa_layout(kv: int, r: int):
+    """Pick (kv_eff, r_eff, repeat) so the sharded head axis divides "model".
+
+    Layout A: kv divides |model|  -> shard the kv axis, keep GQA grouping.
+    Layout B: only h = kv*r does  -> repeat K/V to h heads, shard flat heads.
+    Layout C: neither divides     -> keep GQA grouping, weights replicate
+                                     (divisibility filter in sharding rules).
+    """
+    from repro.distributed.sharding import active_mesh
+
+    mesh = active_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return kv, r, False
+    m = dict(zip(mesh.axis_names, mesh.axis_sizes))["model"]
+    if m <= 1 or kv % m == 0:
+        return kv, r, False
+    if (kv * r) % m == 0:
+        return kv * r, 1, True
+    return kv, r, False
+
+
+def attention(
+    params,
+    x,
+    cfg,
+    *,
+    positions,
+    mode: str,
+    cache=None,
+    cache_index=None,
+    window=None,
+    causal: bool = True,
+    kv_input=None,
+    use_rope: bool = True,
+    cross: bool = False,
+):
+    """Full attention layer.  Returns (out, new_cache).
+
+    mode: "full" (train / prefill over the whole sequence) or "decode".
+    Self-attention cache: dict(k, v) of (B, Smax, KV, dh); ``cache_index``
+    is the number of valid entries *before* this call (traced scalar).
+    Cross-attention (``cross=True``): K/V come from ``kv_input`` in full
+    mode (and are returned as the new cache), or from ``cache`` in decode.
+    """
+    b, s, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    r = h // kv
+
+    q = jnp.einsum("bsd,dhk->bshk", x, val(params["wq"]).astype(x.dtype))
+    kv_src = kv_input if cross else x
+    if not (cross and mode == "decode"):
+        k = jnp.einsum("bsd,dhk->bshk", kv_src, val(params["wk"]).astype(x.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", kv_src, val(params["wv"]).astype(x.dtype))
+    else:
+        k = v = None  # cross-attn decode reads the prefilled cache
+
+    if "q_norm" in params:
+        q = rms_norm(q, val(params["q_norm"]))
+        if k is not None:
+            k = rms_norm(k, val(params["k_norm"]))
+
+    if use_rope and not cross:
+        q = _rope_heads(q, positions, cfg.rope_theta)
+        if k is not None:
+            k = _rope_heads(k, positions, cfg.rope_theta)
+
+    kv_eff, r_eff, repeat_kv = _gqa_layout(kv, r)
+    q = q.reshape(b, s, kv_eff, r_eff, dh)
+    q = shard(q, ("batch", "seq", "kv_heads", None, "head_dim"))
+
+    def widen(t):
+        """(B, S, KV, dh) -> effective layout (repeat to h heads if needed)."""
+        if repeat_kv and t.shape[2] != kv_eff:
+            t = jnp.repeat(t, r, axis=2)
+        return shard(t, ("batch", "cache_seq", "kv_heads", "head_dim"))
+
+    new_cache = cache
+    if mode == "decode":
+        # decode keeps the native GQA grouping: repeating K/V to the flat
+        # head layout would materialise an r-times-larger cache read (the
+        # decode workload is cache-bandwidth-bound; measured 4x traffic on
+        # granite-3-8b) — the cache seq dim supplies the model-axis
+        # parallelism instead (cache_seq sharding rules)
+        q_dec = q.reshape(b, s, kv, r, dh)
+
+        def cache_shard(t):
+            return shard(t, ("batch", "cache_seq", "kv_heads", "head_dim"))
+
+        if not cross:
+            # append this step's k/v at cache index
+            idx = cache_index
+            k_cache = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0)
+            )
+            v_cache = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0)
+            )
+            new_cache = {"k": k_cache, "v": v_cache}
+            out = decode_attention(
+                q_dec, cache_shard(k_cache), cache_shard(v_cache),
+                index=idx + s, window=window,
+            )
+        else:
+            out = decode_attention(
+                q_dec,
+                cache_shard(cache["k"]),
+                cache_shard(cache["v"]),
+                index=cache["k"].shape[1],
+                window=None,
+            )
+        out = out.reshape(b, s, h, dh)
+    else:
+        if k is None:
+            raise ValueError("full mode requires computed k/v")
+        if cache is not None and not cross:
+            # prefill: write the whole sequence into the cache
+            k_cache = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)
+            )
+            v_cache = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)
+            )
+            new_cache = {"k": k_cache, "v": v_cache}
+        elif cross and cache is not None:
+            # whisper prefill: stash encoder K/V for decode steps
+            new_cache = {
+                "k": k.astype(cache["k"].dtype),
+                "v": v.astype(cache["v"].dtype),
+            }
+        out = flash_attention(
+            q,
+            k if not repeat_kv else jnp.repeat(k, r, axis=2),
+            v if not repeat_kv else jnp.repeat(v, r, axis=2),
+            causal=causal,
+            window=window,
+            q_offset=0,
+            block_q=cfg.attn_block_q,
+            block_kv=cfg.attn_block_kv,
+            unroll_causal_skip=getattr(cfg, "attn_causal_skip", False),
+        ).reshape(b, s, h, dh)
+
+    out = jnp.einsum("bshk,hkd->bsd", out, val(params["wo"]).astype(x.dtype))
+    return out, new_cache
+
+
+def _rope_heads(x, positions, theta):
+    """x: (B, S, H, dh), positions: (B, S) or (S,)."""
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    return apply_rope(
+        x.swapaxes(1, 2), positions[:, None, :], theta
+    ).swapaxes(1, 2)
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, n_layers=None, dtype=jnp.bfloat16):
+    """KV cache; stacked (L-major) when n_layers is given (scan decode).
+
+    Logical axes (for sharding): ("layers", "batch", "cache_seq",
+    "kv_heads", "head_dim") — "cache_seq" lets MQA-ish archs shard the
+    cache over "model" instead of heads (config rule override).
+    """
+    kv, dh = cfg.n_kv_heads, cfg.d_head
+    lead = () if n_layers is None else (n_layers,)
+    return {
+        "k": jnp.zeros((*lead, batch, max_len, kv, dh), dtype),
+        "v": jnp.zeros((*lead, batch, max_len, kv, dh), dtype),
+    }
+
+
+KV_CACHE_AXES = ("layers", "batch", "cache_seq", "kv_heads", "head_dim")

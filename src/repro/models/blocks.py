@@ -1,0 +1,212 @@
+"""Transformer / SSM / hybrid / MoE blocks, scan-over-layers compatible.
+
+Every block family exposes ``init_block`` / ``apply_block`` with a uniform
+signature so the stacked-layer scan in ``lm.py`` stays family-agnostic.
+Per-layer heterogeneity (Hymba's global-vs-sliding attention layers) rides
+through the scanned ``meta`` array as traced scalars.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import activation, layer_norm, param, rms_norm, val
+
+
+def _norm_params(key, cfg, name=""):
+    if cfg.norm == "layernorm":
+        return {
+            "w": param(key, (cfg.d_model,), ("embed",), cfg.param_dtype, mode="ones"),
+            "b": param(key, (cfg.d_model,), ("embed",), cfg.param_dtype, mode="zeros"),
+        }
+    return {
+        "w": param(key, (cfg.d_model,), ("embed",), cfg.param_dtype, mode="ones")
+    }
+
+
+def apply_norm(p, x, cfg):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, val(p["w"]), val(p["b"]), cfg.norm_eps)
+    return rms_norm(x, val(p["w"]), cfg.norm_eps)
+
+
+def init_mlp(key, cfg):
+    keys = jax.random.split(key, 3)
+    d, f, dt = cfg.d_model, cfg.d_ff, cfg.param_dtype
+    if cfg.mlp_gated:
+        return {
+            "w_gate": param(keys[0], (d, f), ("embed", "ffn"), dt),
+            "w_up": param(keys[1], (d, f), ("embed", "ffn"), dt),
+            "w_down": param(keys[2], (f, d), ("ffn", "embed"), dt),
+        }
+    return {
+        "w_in": param(keys[0], (d, f), ("embed", "ffn"), dt),
+        "w_out": param(keys[1], (f, d), ("ffn", "embed"), dt),
+    }
+
+
+def apply_mlp(p, x, cfg):
+    act = activation(cfg.act)
+    if cfg.mlp_gated:
+        h = act(x @ val(p["w_gate"]).astype(x.dtype)) * (
+            x @ val(p["w_up"]).astype(x.dtype)
+        )
+        h = shard(h, ("batch", "seq", "ffn"))
+        return h @ val(p["w_down"]).astype(x.dtype)
+    h = act(x @ val(p["w_in"]).astype(x.dtype))
+    h = shard(h, ("batch", "seq", "ffn"))
+    return h @ val(p["w_out"]).astype(x.dtype)
+
+
+# --- block init -------------------------------------------------------------
+
+
+def init_block(key, cfg, *, kind: str | None = None):
+    """kind overrides cfg.family (used for whisper encoder/decoder blocks)."""
+    kind = kind or cfg.family
+    keys = jax.random.split(key, 8)
+    p: dict = {"ln1": _norm_params(keys[0], cfg)}
+
+    if kind == "ssm":
+        p["mamba"] = ssm_mod.init_mamba2(keys[1], cfg)
+        return p
+
+    if kind == "hybrid":
+        p["attn"] = attn_mod.init_attention(keys[1], cfg)
+        p["mamba"] = ssm_mod.init_mamba2(keys[2], cfg)
+        p["branch_scale"] = param(
+            keys[3], (2,), (None,), jnp.float32, mode="ones"
+        )
+        p["ln2"] = _norm_params(keys[4], cfg)
+        p["mlp"] = init_mlp(keys[5], cfg)
+        return p
+
+    # attention families
+    p["attn"] = attn_mod.init_attention(keys[1], cfg)
+    if kind == "encoder_cross":  # whisper decoder block
+        p["ln_cross"] = _norm_params(keys[2], cfg)
+        p["cross"] = attn_mod.init_attention(keys[3], cfg, cross=True)
+    p["ln2"] = _norm_params(keys[4], cfg)
+    if kind == "moe":
+        p["moe"] = moe_mod.init_moe(keys[5], cfg)
+    else:
+        p["mlp"] = init_mlp(keys[5], cfg)
+    return p
+
+
+# --- block apply ------------------------------------------------------------
+
+
+def apply_block(
+    p,
+    x,
+    cfg,
+    *,
+    mode: str,
+    positions,
+    cache=None,
+    cache_index=None,
+    meta=None,
+    enc_out=None,
+    kind: str | None = None,
+):
+    """Returns (x, new_cache, aux_loss).
+
+    Cache contract (per layer; the stacked index lives at the LM level):
+      dense/moe/vlm : {"k", "v"}
+      ssm           : {"state", "conv_x", "conv_B", "conv_C"}
+      hybrid        : {"attn": {...}, "ssm": {...}}
+      encoder_cross : {"self": {...}, "cross": {"k", "v"}}
+    """
+    kind = kind or cfg.family
+    aux = jnp.zeros((), jnp.float32)
+    seq_axis = "seq_sp" if getattr(cfg, "seq_shard", False) else "seq"
+    x = shard(x, ("batch", seq_axis, "embed"))
+
+    window = None
+    causal = kind != "encoder"
+    if cfg.sliding_window > 0 and kind not in ("encoder",):
+        w = jnp.int32(cfg.sliding_window)
+        if meta is not None and "is_global" in meta:
+            window = jnp.where(meta["is_global"], attn_mod.GLOBAL_WINDOW, w)
+        else:
+            window = w
+
+    if kind == "ssm":
+        h = apply_norm(p["ln1"], x, cfg)
+        if mode == "decode":
+            out, nc = ssm_mod.mamba2_decode(p["mamba"], h, cfg, cache)
+        else:
+            out, nc = ssm_mod.mamba2_full(p["mamba"], h, cfg, cache)
+        return x + out, nc, aux
+
+    if kind == "hybrid":
+        h = apply_norm(p["ln1"], x, cfg)
+        attn_cache = None if cache is None else cache["attn"]
+        ssm_cache = None if cache is None else cache["ssm"]
+        if mode == "decode":
+            a_out, a_cache = attn_mod.attention(
+                p["attn"], h, cfg, positions=positions, mode="decode",
+                cache=attn_cache, cache_index=cache_index, window=window,
+            )
+            s_out, s_cache = ssm_mod.mamba2_decode(p["mamba"], h, cfg, ssm_cache)
+        else:
+            a_out, a_cache = attn_mod.attention(
+                p["attn"], h, cfg, positions=positions, mode="full",
+                cache=attn_cache, cache_index=cache_index, window=window,
+            )
+            s_out, s_cache = ssm_mod.mamba2_full(p["mamba"], h, cfg, ssm_cache)
+        scale = val(p["branch_scale"]).astype(x.dtype)
+        x = x + scale[0] * a_out + scale[1] * s_out
+        h2 = apply_norm(p["ln2"], x, cfg)
+        x = x + apply_mlp(p["mlp"], h2, cfg)
+        new_cache = (
+            None if cache is None else {"attn": a_cache, "ssm": s_cache}
+        )
+        return x, new_cache, aux
+
+    # attention families (dense / moe / vlm / encoder / encoder_cross)
+    self_cache = cache
+    if kind == "encoder_cross" and cache is not None:
+        self_cache = cache["self"]
+    h = apply_norm(p["ln1"], x, cfg)
+    a_out, new_self_cache = attn_mod.attention(
+        p["attn"],
+        h,
+        cfg,
+        positions=positions,
+        mode="decode" if mode == "decode" else "full",
+        cache=None if kind == "encoder" else self_cache,
+        cache_index=cache_index,
+        window=window,
+        causal=causal,
+        use_rope=kind != "encoder",
+    )
+    x = x + a_out
+    new_cache = new_self_cache
+
+    if kind == "encoder_cross":
+        hc = apply_norm(p["ln_cross"], x, cfg)
+        cross_cache = None if cache is None else cache["cross"]
+        c_out, new_cross_cache = attn_mod.attention(
+            p["cross"], hc, cfg, positions=positions,
+            mode="decode" if mode == "decode" else "full",
+            cache=cross_cache, causal=False, kv_input=enc_out,
+            use_rope=False, cross=True,
+        )
+        x = x + c_out
+        if cache is not None:
+            new_cache = {"self": new_self_cache, "cross": new_cross_cache}
+
+    h2 = apply_norm(p["ln2"], x, cfg)
+    if kind == "moe":
+        m_out, aux = moe_mod.moe_ffn(p["moe"], h2, cfg, activation(cfg.act))
+        x = x + m_out
+    else:
+        x = x + apply_mlp(p["mlp"], h2, cfg)
+    return x, new_cache, aux

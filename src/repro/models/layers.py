@@ -1,0 +1,133 @@
+"""Basic layers + the annotated-parameter machinery.
+
+Params are plain pytrees; every leaf is created through ``param(...)`` which
+records its *logical sharding axes* in a parallel tree.  ``split_annotated``
+separates (values, axes) so launchers can derive in/out shardings, and
+``jax.eval_shape`` over an init function yields an allocation-free skeleton
+for the multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LogicalAxes:
+    """Opaque pytree *leaf* holding a param's logical axis names."""
+
+    names: tuple
+
+    def __len__(self):
+        return len(self.names)
+
+
+class Annotated(NamedTuple):
+    value: Any          # jnp array (or ShapeDtypeStruct under eval_shape)
+    axes: LogicalAxes   # logical axis names, len == value.ndim
+
+
+def param(key, shape, axes, dtype=jnp.float32, scale: float | None = None, mode="normal"):
+    """Create an annotated parameter leaf."""
+    if len(axes) != len(shape):
+        raise ValueError(f"axes {axes} do not match shape {shape}")
+    if mode == "zeros":
+        value = jnp.zeros(shape, dtype)
+    elif mode == "ones":
+        value = jnp.ones(shape, dtype)
+    else:
+        if scale is None:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            scale = 1.0 / np.sqrt(max(1, fan_in))
+        value = (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+    return Annotated(value=value, axes=LogicalAxes(tuple(axes)))
+
+
+def is_annotated(x) -> bool:
+    return isinstance(x, Annotated)
+
+
+def val(x):
+    """Unwrap an Annotated leaf; pass raw arrays through.
+
+    Apply-functions use this so they run both on freshly-initialised
+    Annotated trees and on the plain value trees used under scan/jit.
+    """
+    return x.value if isinstance(x, Annotated) else x
+
+
+def split_annotated(tree):
+    """pytree of Annotated -> (values pytree, axes pytree of LogicalAxes)."""
+    values = jax.tree.map(lambda a: a.value, tree, is_leaf=is_annotated)
+    axes = jax.tree.map(lambda a: a.axes, tree, is_leaf=is_annotated)
+    return values, axes
+
+
+def is_axes(x) -> bool:
+    return isinstance(x, LogicalAxes)
+
+
+# --- numerics --------------------------------------------------------------
+
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mean) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def activation(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "relu": jax.nn.relu,
+        "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+    }[name]
+
+
+# --- rotary position embedding --------------------------------------------
+
+
+def rope_frequencies(d_head: int, theta: float = 10000.0):
+    inv = 1.0 / (theta ** (np.arange(0, d_head, 2, dtype=np.float64) / d_head))
+    return jnp.asarray(inv, dtype=jnp.float32)
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, dh) with positions (..., S) -> rotated x, f32 math."""
+    dh = x.shape[-1]
+    inv = rope_frequencies(dh, theta)
+    angles = positions[..., None].astype(jnp.float32) * inv        # (..., S, dh/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- embedding -------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.float32):
+    return param(
+        key, (vocab, d_model), ("vocab", "embed"), dtype=dtype, scale=1.0
+    )
+
+
+def embed_lookup(table, tokens):
+    return jnp.take(table, tokens, axis=0)

@@ -1,0 +1,288 @@
+"""Mixture-of-Experts FFN with top-k routing, capacity dispatch, and EP.
+
+Two execution paths share one dispatch discipline:
+
+* ``moe_ffn_local`` — single-program reference: per-batch-row sort-based
+  capacity dispatch, dense expert einsums over the full expert stack.
+* ``moe_ffn_ep`` — expert parallelism via *partial-auto* ``jax.shard_map``:
+  the expert-stacked weights are manual over the "model" mesh axis
+  (E_local = E / |model| experts per rank), activations stay replicated over
+  "model" and auto-sharded over "data"/"pod".  Each rank dispatches its own
+  experts' tokens locally and the combine is a single ``psum`` over
+  "model" — the same collective schedule as a TP FFN (one all-reduce of the
+  activation per MoE layer, no all-to-all), see DESIGN.md §6.
+
+Dispatch is per *batch row* so the sort never crosses the data-parallel
+sharding: within a row the (S*k) assignments are sorted by expert id,
+positions within each expert come from segment arithmetic, and tokens past
+the static per-expert capacity are dropped (combine weight zero) — the
+GShard/Switch discipline that keeps every shape static for pjit.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import active_mesh, shard
+from repro.models.layers import param, val
+
+
+def init_moe(key, cfg):
+    """cfg: d_model, n_experts E, d_ff (per-expert hidden), param_dtype."""
+    keys = jax.random.split(key, 4)
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff
+    dt = cfg.param_dtype
+    return {
+        "router": param(keys[0], (d, e), ("embed", None), jnp.float32),
+        "w_gate": param(keys[1], (e, d, f), ("experts", "embed", "ffn"), dt),
+        "w_up": param(keys[2], (e, d, f), ("experts", "embed", "ffn"), dt),
+        "w_down": param(keys[3], (e, f, d), ("experts", "ffn", "embed"), dt),
+    }
+
+
+def capacity(tokens_per_row: int, n_experts: int, top_k: int, factor: float) -> int:
+    cap = int(tokens_per_row * top_k / n_experts * factor)
+    return max(8, ((cap + 7) // 8) * 8)  # 8-aligned for TPU sublanes
+
+
+def route(router_w, x, top_k: int, renormalize: bool = True):
+    """x: (..., d) -> (probs (..., k), experts (..., k) int32, aux scalar)."""
+    logits = jnp.einsum("...d,de->...e", x.astype(jnp.float32), router_w)
+    probs_full = jax.nn.softmax(logits, axis=-1)
+    probs, experts = jax.lax.top_k(probs_full, top_k)
+    if renormalize:
+        probs = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-9)
+    # load-balancing auxiliary loss (Switch-style), over all leading dims
+    e = router_w.shape[-1]
+    flat_probs = probs_full.reshape(-1, e)
+    me = jnp.mean(flat_probs, axis=0)
+    ce = jnp.mean(
+        jax.nn.one_hot(experts.reshape(-1, top_k)[:, 0], e, dtype=jnp.float32),
+        axis=0,
+    )
+    aux_loss = e * jnp.sum(me * ce)
+    return probs, experts, aux_loss
+
+
+def _dispatch_row(xr, pr, er, n_experts: int, top_k: int, cap: int, offset):
+    """One batch row: (S,d),(S,k),(S,k) -> (E,cap,d) buffer + combine info.
+
+    ``offset``/``n_experts`` select a contiguous local expert range
+    [offset, offset+n_experts) — 0/E for the local path, rank slice for EP.
+    """
+    s, d = xr.shape
+    flat_e = er.reshape(-1).astype(jnp.int32) - offset          # (S*k,)
+    flat_p = pr.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(s), top_k)
+    is_local = (flat_e >= 0) & (flat_e < n_experts)
+    sort_key = jnp.where(is_local, flat_e, n_experts)           # non-local last
+    order = jnp.argsort(sort_key, stable=True)
+    se = sort_key[order]
+    pos = jnp.arange(s * top_k) - jnp.searchsorted(se, se, side="left")
+    keep = (se < n_experts) & (pos < cap)
+    slot = jnp.where(keep, se * cap + pos, n_experts * cap)     # overflow slot
+
+    buf = jnp.zeros((n_experts * cap + 1, d), xr.dtype)
+    buf = buf.at[slot].set(xr[flat_tok[order]], mode="drop")
+    buf = buf[: n_experts * cap].reshape(n_experts, cap, d)
+    weights = jnp.where(keep, flat_p[order], 0.0)
+    return buf, (slot, flat_tok[order], weights)
+
+
+def _combine_row(out_buf, info, s: int):
+    """(E,cap,d) expert outputs -> (S,d) weighted scatter-add."""
+    slot, tok, weights = info
+    e, cap, d = out_buf.shape
+    flat = out_buf.reshape(e * cap, d)
+    contrib = flat[jnp.minimum(slot, e * cap - 1)] * weights[:, None].astype(
+        flat.dtype
+    )
+    return jnp.zeros((s, d), out_buf.dtype).at[tok].add(contrib)
+
+
+def _expert_ffn(buf, wg, wu, wd, act):
+    """buf: (B, E, cap, d) x stacked weights (E, d, f) -> (B, E, cap, d)."""
+    hg = jnp.einsum("becd,edf->becf", buf, wg.astype(buf.dtype))
+    hu = jnp.einsum("becd,edf->becf", buf, wu.astype(buf.dtype))
+    hidden = act(hg) * hu
+    return jnp.einsum("becf,efd->becd", hidden, wd.astype(buf.dtype))
+
+
+def _moe_body(x, probs, experts, wg, wu, wd, cfg, act, offset, constrain=False):
+    """Shared body: dispatch/compute/combine for a local expert slice.
+
+    With ``constrain`` (the auto-GSPMD path), sharding constraints pin the
+    dispatch buffers to ("batch" x "experts") so the partitioner keeps the
+    expert einsums EP-local and lowers the combine scatter-add into local
+    partial sums + one activation all-reduce — the same schedule an
+    explicit shard_map EP would produce.
+    """
+    b, s, d = x.shape
+    e_local = wg.shape[0]
+    cap = capacity(s, cfg.n_experts, cfg.moe_top_k, cfg.moe_capacity_factor)
+    bufs, infos = jax.vmap(
+        lambda xr, pr, er: _dispatch_row(
+            xr, pr, er, e_local, cfg.moe_top_k, cap, offset
+        )
+    )(x, probs, experts)
+    if constrain:
+        # dispatch buffer stays REPLICATED over "model": the row-local
+        # scatter then needs no cross-rank merge (an experts-sharded
+        # constraint here makes GSPMD lower the scatter as full-size
+        # partial + all-reduce — measured 206 GB/step on qwen3-moe).
+        # The expert einsum below reads each rank's slice of it locally.
+        bufs = shard(bufs, ("batch", None, "expert_cap", "embed"))
+    out_bufs = _expert_ffn(bufs, wg, wu, wd, act)
+    if constrain:
+        out_bufs = shard(out_bufs, ("batch", "experts", "expert_cap", "embed"))
+    return jax.vmap(lambda ob, info: _combine_row(ob, info, s))(out_bufs, infos)
+
+
+def moe_ffn_local(params, x, cfg, act, constrain=False):
+    """Single-program / auto-GSPMD path. x: (B,S,d) -> (out, aux)."""
+    probs, experts, aux = route(
+        val(params["router"]), x, cfg.moe_top_k, renormalize=cfg.moe_renormalize
+    )
+    out = _moe_body(
+        x,
+        probs,
+        experts,
+        val(params["w_gate"]),
+        val(params["w_up"]),
+        val(params["w_down"]),
+        cfg,
+        act,
+        offset=0,
+        constrain=constrain,
+    )
+    return out, aux
+
+
+def moe_ffn_ep(params, x, cfg, act, mesh, axis: str = "model"):
+    """Expert-parallel path: experts manual over ``axis``, rest auto.
+
+    AD never differentiates *through* the shard_map: a ``jax.custom_vjp``
+    wraps it, and the backward pass is its own shard_map that replays the
+    local dispatch under ``jax.vjp`` (recompute-style; dispatch is cheap
+    relative to the expert matmuls).  This sidesteps an XLA SPMD crash when
+    transposing a partial-auto shard_map inside scan+remat, and matches the
+    schedule a hand-written EP backward would use anyway: dW stays
+    rank-local and dx/drouter take the same single all-reduce as the
+    forward combine.
+
+    Routing runs inside the manual region (replicated compute — the router
+    matmul is tiny), so only float tensors cross the custom_vjp boundary.
+    """
+    w_spec = P(axis, None, None)
+
+    def local_fwd(x_, rw_, wg_, wu_, wd_):
+        e_local = wg_.shape[0]
+        offset = jax.lax.axis_index(axis) * e_local
+        probs, experts, _ = route(
+            rw_, x_, cfg.moe_top_k, renormalize=cfg.moe_renormalize
+        )
+        return _moe_body(x_, probs, experts, wg_, wu_, wd_, cfg, act, offset)
+
+    @jax.custom_vjp
+    def ep(x_, rw_, wg_, wu_, wd_):
+        def body(*args):
+            return jax.lax.psum(local_fwd(*args), axis)
+
+        return jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(), P(), w_spec, w_spec, w_spec),
+            out_specs=P(),
+            axis_names={axis},
+            check_vma=False,
+        )(x_, rw_, wg_, wu_, wd_)
+
+    def ep_fwd(x_, rw_, wg_, wu_, wd_):
+        return ep(x_, rw_, wg_, wu_, wd_), (x_, rw_, wg_, wu_, wd_)
+
+    def ep_bwd(res, dout):
+        def body(x_, rw_, wg_, wu_, wd_, dout_):
+            _, vjp = jax.vjp(local_fwd, x_, rw_, wg_, wu_, wd_)
+            dx, drw, dwg, dwu, dwd = vjp(dout_)
+            return (
+                jax.lax.psum(dx, axis),
+                jax.lax.psum(drw, axis),
+                dwg,
+                dwu,
+                dwd,
+            )
+
+        return jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(), P(), w_spec, w_spec, w_spec, P()),
+            out_specs=(P(), P(), w_spec, w_spec, w_spec),
+            axis_names={axis},
+            check_vma=False,
+        )(*res, dout)
+
+    ep.defvjp(ep_fwd, ep_bwd)
+
+    out = ep(
+        x,
+        val(params["router"]),
+        val(params["w_gate"]),
+        val(params["w_up"]),
+        val(params["w_down"]),
+    )
+    # aux load-balancing loss: differentiable routing stats, auto-sharded
+    _, _, aux = route(
+        val(params["router"]), x, cfg.moe_top_k, renormalize=cfg.moe_renormalize
+    )
+    return out, aux
+
+
+import os as _os
+
+# The explicit shard_map EP path trips an XLA SPMD CHECK-crash ("Invalid
+# binary instruction opcode copy") when a partial-auto shard_map sits inside
+# the layer scan in this XLA build.  The default is therefore the
+# constraint-steered auto path (identical collective schedule, see
+# _moe_body); flip this env var to exercise the shard_map path on a
+# toolchain where the bug is fixed.
+USE_SHARD_MAP_EP = _os.environ.get("REPRO_MOE_SHARD_MAP_EP", "0") == "1"
+
+
+def moe_ffn(params, x, cfg, act):
+    """Dispatching entry: EP-constrained when a mesh is active, else local."""
+    mesh = active_mesh()
+    ep_capable = (
+        mesh is not None
+        and "model" in mesh.axis_names
+        and cfg.n_experts % dict(zip(mesh.axis_names, mesh.axis_sizes))["model"] == 0
+        and dict(zip(mesh.axis_names, mesh.axis_sizes))["model"] > 1
+    )
+    if ep_capable and USE_SHARD_MAP_EP:
+        return moe_ffn_ep(params, x, cfg, act, mesh)
+    out, aux = moe_ffn_local(params, x, cfg, act, constrain=ep_capable)
+    return shard(out, ("batch", "seq", "embed")), aux
+
+
+def moe_dense_reference(params, x, cfg, act):
+    """All-experts dense evaluation (oracle for routing/combine tests).
+
+    No capacity limit: equals the capacity path exactly whenever no token
+    overflows (tests use high capacity_factor to guarantee that).
+    """
+    b, s, d = x.shape
+    n = b * s
+    xf = x.reshape(n, d)
+    probs, experts, _ = route(
+        val(params["router"]), xf, cfg.moe_top_k, renormalize=cfg.moe_renormalize
+    )
+    hg = jnp.einsum("nd,edf->nef", xf, val(params["w_gate"]).astype(x.dtype))
+    hu = jnp.einsum("nd,edf->nef", xf, val(params["w_up"]).astype(x.dtype))
+    hidden = act(hg) * hu
+    all_out = jnp.einsum(
+        "nef,efd->ned", hidden, val(params["w_down"]).astype(x.dtype)
+    )
+    sel = jnp.take_along_axis(all_out, experts[..., None], axis=1)  # (N, k, d)
+    out = jnp.sum(sel * probs[..., None].astype(x.dtype), axis=1)
+    return out.reshape(b, s, d)

@@ -1,0 +1,253 @@
+"""Mamba-2 (SSD, state-space duality) layer — arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm as a single `lax.scan` over
+sequence chunks (carrying the inter-chunk state), which bounds the intra-
+chunk (L x L) attention-like matrix to one chunk at a time; decode is the
+O(1) recurrent step on a (B, H, P, N) state.  A naive step-by-step
+recurrence reference is provided for equivalence tests.
+
+TP note: heads shard over "model" ("ssm_heads") when divisible (mamba2-1.3b:
+64 heads / 16 = 4); Hymba's 50 SSM heads are not divisible by 16 and fall
+back to replication per the sharding rules' divisibility filter (attention
+still shards; recorded in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import param, rms_norm, val
+
+
+def init_mamba2(key, cfg):
+    """cfg: d_model, ssm_heads H, ssm_head_dim P, ssm_state N, ssm_groups G,
+    ssm_conv K, param_dtype."""
+    keys = jax.random.split(key, 12)
+    d = cfg.d_model
+    h, p, n, g, k = (
+        cfg.ssm_heads,
+        cfg.ssm_head_dim,
+        cfg.ssm_state,
+        cfg.ssm_groups,
+        cfg.ssm_conv,
+    )
+    dt_ = cfg.param_dtype
+    params = {
+        "wx": param(keys[0], (d, h, p), ("embed", "ssm_heads", "head_dim"), dt_),
+        "wz": param(keys[1], (d, h, p), ("embed", "ssm_heads", "head_dim"), dt_),
+        "wB": param(keys[2], (d, g, n), ("embed", None, "ssm_state"), dt_),
+        "wC": param(keys[3], (d, g, n), ("embed", None, "ssm_state"), dt_),
+        "wdt": param(keys[4], (d, h), ("embed", "ssm_heads"), dt_),
+        "conv_x": param(keys[5], (k, h, p), ("conv", "ssm_heads", "head_dim"), dt_, scale=0.5),
+        "conv_B": param(keys[6], (k, g, n), ("conv", None, "ssm_state"), dt_, scale=0.5),
+        "conv_C": param(keys[7], (k, g, n), ("conv", None, "ssm_state"), dt_, scale=0.5),
+        "A_log": param(keys[8], (h,), ("ssm_heads",), jnp.float32, mode="zeros"),
+        "D": param(keys[9], (h,), ("ssm_heads",), jnp.float32, mode="ones"),
+        "dt_bias": param(keys[10], (h,), ("ssm_heads",), jnp.float32, mode="zeros"),
+        "norm": param(keys[11], (h, p), ("ssm_heads", "head_dim"), dt_, mode="ones"),
+        "out": param(
+            jax.random.fold_in(key, 99), (h, p, d),
+            ("ssm_heads", "head_dim", "embed"), dt_,
+        ),
+    }
+    return params
+
+
+def _causal_conv_full(x, w, cache=None):
+    """Depthwise causal conv over time. x: (B,S,...ch), w: (K,...ch)."""
+    k = w.shape[0]
+    pad = [(0, 0)] * x.ndim
+    if cache is None:
+        pad[1] = (k - 1, 0)
+        xp = jnp.pad(x, pad)
+    else:
+        xp = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1]] * w[i][None, None] for i in range(k)
+    )
+    new_cache = xp[:, -(k - 1) :] if k > 1 else None
+    return out, new_cache
+
+
+def _project(params, x):
+    """x: (B,S,d) -> xs (B,S,H,P), z, B (B,S,G,N), C, dt (B,S,H)."""
+    dtv = x.dtype
+    xs = jnp.einsum("bsd,dhp->bshp", x, val(params["wx"]).astype(dtv))
+    z = jnp.einsum("bsd,dhp->bshp", x, val(params["wz"]).astype(dtv))
+    bmat = jnp.einsum("bsd,dgn->bsgn", x, val(params["wB"]).astype(dtv))
+    cmat = jnp.einsum("bsd,dgn->bsgn", x, val(params["wC"]).astype(dtv))
+    dt = jnp.einsum("bsd,dh->bsh", x, val(params["wdt"]).astype(dtv))
+    return xs, z, bmat, cmat, dt
+
+
+def mamba2_full(params, x, cfg, cache=None):
+    """Training / prefill path. x: (B, S, d) -> (y (B,S,d), new_cache).
+
+    Sequences that don't divide the chunk size are padded with *identity
+    transitions*: padded steps get dt = 0, i.e. exp(dt*A) = 1 and zero
+    input, so the carried state after step s is exact and the padded
+    outputs are sliced off.
+    """
+    b, s, d = x.shape
+    h, p, n, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    chunk = min(cfg.ssm_chunk, s)
+    s_pad = ((s + chunk - 1) // chunk) * chunk
+    nc = s_pad // chunk
+
+    xs, z, bmat, cmat, dt = _project(params, x)
+    conv_caches = {}
+    xs, conv_caches["conv_x"] = _causal_conv_full(
+        xs, val(params["conv_x"]), None if cache is None else cache["conv_x"]
+    )
+    bmat, conv_caches["conv_B"] = _causal_conv_full(
+        bmat, val(params["conv_B"]), None if cache is None else cache["conv_B"]
+    )
+    cmat, conv_caches["conv_C"] = _causal_conv_full(
+        cmat, val(params["conv_C"]), None if cache is None else cache["conv_C"]
+    )
+    xs, bmat, cmat = jax.nn.silu(xs), jax.nn.silu(bmat), jax.nn.silu(cmat)
+
+    a_vec = -jnp.exp(val(params["A_log"]))                      # (H,) negative
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + val(params["dt_bias"]))  # (B,S,H)
+
+    if s_pad != s:
+        pad2 = [(0, 0), (0, s_pad - s)]
+        xs_p = jnp.pad(xs, pad2 + [(0, 0)] * (xs.ndim - 2))
+        bmat = jnp.pad(bmat, pad2 + [(0, 0)] * (bmat.ndim - 2))
+        cmat = jnp.pad(cmat, pad2 + [(0, 0)] * (cmat.ndim - 2))
+        dt = jnp.pad(dt, pad2 + [(0, 0)])   # dt = 0 -> identity transition
+    else:
+        xs_p = xs
+
+    rep = h // g
+    bmat_h = jnp.repeat(bmat, rep, axis=2).astype(jnp.float32)   # (B,S,H,N)
+    cmat_h = jnp.repeat(cmat, rep, axis=2).astype(jnp.float32)
+    xdt = xs_p.astype(jnp.float32) * dt[..., None]               # (B,S,H,P)
+    loga = dt * a_vec                                            # (B,S,H) <= 0
+
+    # chunked views: (nc, B, L, ...)
+    def chunked(t):
+        return jnp.moveaxis(t.reshape(b, nc, chunk, *t.shape[2:]), 1, 0)
+
+    xdt_c, b_c, c_c, loga_c = map(chunked, (xdt, bmat_h, cmat_h, loga))
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))               # l >= s
+
+    h0 = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if cache is None
+        else cache["state"].astype(jnp.float32)
+    )
+
+    def chunk_step(h_prev, inputs):
+        xdt_i, b_i, c_i, la_i = inputs                           # (B,L,H,*)
+        ca = jnp.cumsum(la_i, axis=1)                            # (B,L,H)
+        a_tot = ca[:, -1]                                        # (B,H)
+        # intra-chunk (diagonal) term
+        att = jnp.einsum("blhn,bshn->blsh", c_i, b_i)
+        decay = jnp.exp(ca[:, :, None] - ca[:, None, :])         # (B,L,S,H)
+        att = att * decay * tri[None, :, :, None]
+        y = jnp.einsum("blsh,bshp->blhp", att, xdt_i)
+        # contribution of the carried state
+        y += jnp.einsum("blhn,bhpn,blh->blhp", c_i, h_prev, jnp.exp(ca))
+        # new carried state
+        decay_in = jnp.exp(a_tot[:, None] - ca)                  # (B,L,H)
+        h_new = h_prev * jnp.exp(a_tot)[:, :, None, None] + jnp.einsum(
+            "blhn,blh,blhp->bhpn", b_i, decay_in, xdt_i
+        )
+        return h_new, y
+
+    h_last, y_c = jax.lax.scan(chunk_step, h0, (xdt_c, b_c, c_c, loga_c))
+    y = jnp.moveaxis(y_c, 0, 1).reshape(b, s_pad, h, p)[:, :s]
+    y = y + val(params["D"])[None, None, :, None] * xs.astype(jnp.float32)
+
+    y = y * jax.nn.silu(z.astype(jnp.float32))                   # gated
+    y = rms_norm(y, val(params["norm"]))                        # per-head RMS
+    out = jnp.einsum("bshp,hpd->bsd", y.astype(x.dtype), val(params["out"]).astype(x.dtype))
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "state": h_last.astype(cache["state"].dtype),
+            "conv_x": conv_caches["conv_x"].astype(cache["conv_x"].dtype),
+            "conv_B": conv_caches["conv_B"].astype(cache["conv_B"].dtype),
+            "conv_C": conv_caches["conv_C"].astype(cache["conv_C"].dtype),
+        }
+    return out, new_cache
+
+
+def mamba2_decode(params, x, cfg, cache):
+    """Single-step recurrence. x: (B, 1, d)."""
+    b = x.shape[0]
+    h, p, n, g, k = (
+        cfg.ssm_heads,
+        cfg.ssm_head_dim,
+        cfg.ssm_state,
+        cfg.ssm_groups,
+        cfg.ssm_conv,
+    )
+    xs, z, bmat, cmat, dt = _project(params, x)
+
+    def conv_step(t, w, cbuf):
+        buf = jnp.concatenate([cbuf.astype(t.dtype), t], axis=1)   # (B, K, ...)
+        out = jnp.einsum("bk...,k...->b...", buf, w.astype(t.dtype))[:, None]
+        return out, buf[:, 1:]
+
+    xs, conv_x = conv_step(xs, val(params["conv_x"]), cache["conv_x"])
+    bmat, conv_B = conv_step(bmat, val(params["conv_B"]), cache["conv_B"])
+    cmat, conv_C = conv_step(cmat, val(params["conv_C"]), cache["conv_C"])
+    xs, bmat, cmat = jax.nn.silu(xs), jax.nn.silu(bmat), jax.nn.silu(cmat)
+
+    a_vec = -jnp.exp(val(params["A_log"]))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + val(params["dt_bias"]))[:, 0]  # (B,H)
+    rep = h // g
+    b_h = jnp.repeat(bmat[:, 0], rep, axis=1).astype(jnp.float32)  # (B,H,N)
+    c_h = jnp.repeat(cmat[:, 0], rep, axis=1).astype(jnp.float32)
+    x_h = xs[:, 0].astype(jnp.float32)                              # (B,H,P)
+
+    da = jnp.exp(dt * a_vec)                                        # (B,H)
+    state = cache["state"].astype(jnp.float32)
+    state = state * da[:, :, None, None] + jnp.einsum(
+        "bhp,bhn,bh->bhpn", x_h, b_h, dt
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", state, c_h)
+    y = y + val(params["D"])[None, :, None] * x_h
+    y = y[:, None] * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y, val(params["norm"]))
+    out = jnp.einsum("bshp,hpd->bsd", y.astype(x.dtype), val(params["out"]).astype(x.dtype))
+    new_cache = {
+        "state": state.astype(cache["state"].dtype),
+        "conv_x": conv_x.astype(cache["conv_x"].dtype),
+        "conv_B": conv_B.astype(cache["conv_B"].dtype),
+        "conv_C": conv_C.astype(cache["conv_C"].dtype),
+    }
+    return out, new_cache
+
+
+def mamba2_reference(params, x, cfg):
+    """Naive step-by-step recurrence (oracle for the chunked path)."""
+    b, s, d = x.shape
+    cache = init_ssm_cache(cfg, b, n_layers=None, dtype=jnp.float32)
+    outs = []
+    for t in range(s):
+        o, cache = mamba2_decode(params, x[:, t : t + 1], cfg, cache)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)
+
+
+def init_ssm_cache(cfg, batch: int, n_layers=None, dtype=jnp.bfloat16):
+    h, p, n, g, k = (
+        cfg.ssm_heads,
+        cfg.ssm_head_dim,
+        cfg.ssm_state,
+        cfg.ssm_groups,
+        cfg.ssm_conv,
+    )
+    lead = () if n_layers is None else (n_layers,)
+    return {
+        "state": jnp.zeros((*lead, batch, h, p, n), jnp.float32),
+        "conv_x": jnp.zeros((*lead, batch, k - 1, h, p), dtype),
+        "conv_B": jnp.zeros((*lead, batch, k - 1, g, n), dtype),
+        "conv_C": jnp.zeros((*lead, batch, k - 1, g, n), dtype),
+    }

@@ -1,0 +1,137 @@
+"""AdamW with global-norm clipping and ZeRO-1 style sharded states.
+
+Built from scratch (no optax in this container).  Optimizer moments are
+float32 regardless of the (usually bf16) param dtype; the first/second
+moments inherit each param's logical axes *plus* a ZeRO extension: the
+largest replicated dim divisible by the full DP extent is bound to
+("pod", "data") via ``add_zero_axes``, so m/v/master shard over data
+parallelism the way ZeRO-1 does.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import add_zero_axes, get_rules, shard
+from repro.models.layers import LogicalAxes
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4                 # peak; schedules multiply this
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    use_master: bool = False         # keep f32 master copies of bf16 params
+
+
+def zero_axes_tree(params, axes_tree):
+    """Extend each param's logical axes with the ZeRO DP axis."""
+
+    def f(v, a):
+        names = a.names if isinstance(a, LogicalAxes) else tuple(a)
+        return LogicalAxes(add_zero_axes(names, v.shape))
+
+    return jax.tree.map(f, params, axes_tree)
+
+
+def adamw_init(params, cfg: AdamWConfig = AdamWConfig()):
+    """Returns opt_state pytree: {step, m, v[, master]}."""
+    f32_zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(f32_zeros, params),
+        "v": jax.tree.map(f32_zeros, params),
+    }
+    if cfg.use_master:
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def opt_state_axes(params_shapes, axes_tree, cfg: AdamWConfig = AdamWConfig()):
+    """Logical axes for the opt state (ZeRO-extended) for sharding specs."""
+    zaxes = zero_axes_tree(params_shapes, axes_tree)
+    state_axes = {"step": LogicalAxes(()), "m": zaxes, "v": zaxes}
+    if cfg.use_master:
+        state_axes["master"] = zaxes
+    return state_axes
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [
+        jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree)
+    ]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    grads,
+    opt_state,
+    params,
+    cfg: AdamWConfig = AdamWConfig(),
+    lr_scale=1.0,
+    axes_tree=None,
+):
+    """One AdamW step.  Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9))
+    lr = cfg.lr * lr_scale
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    treedef = jax.tree.structure(params)
+    p_list = jax.tree.leaves(params)
+    g_list = jax.tree.leaves(grads)
+    m_list = jax.tree.leaves(opt_state["m"])
+    v_list = jax.tree.leaves(opt_state["v"])
+    master_list = (
+        jax.tree.leaves(opt_state["master"]) if "master" in opt_state else [None] * len(p_list)
+    )
+    if axes_tree is not None:
+        za_list = jax.tree.leaves(
+            zero_axes_tree(params, axes_tree),
+            is_leaf=lambda x: isinstance(x, LogicalAxes),
+        )
+        rules = get_rules().replace(_zero=("pod", "data"))
+    else:
+        za_list = [None] * len(p_list)
+        rules = None
+
+    new_p, new_m, new_v, new_master = [], [], [], []
+    for p, g, m, v, master, za in zip(
+        p_list, g_list, m_list, v_list, master_list, za_list
+    ):
+        g = g.astype(jnp.float32) * clip
+        m_n = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v_n = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g)
+        if za is not None:
+            m_n = shard(m_n, za.names, rules)
+            v_n = shard(v_n, za.names, rules)
+        update = (m_n / b1c) / (jnp.sqrt(v_n / b2c) + cfg.eps)
+        p32 = (master if master is not None else p).astype(jnp.float32)
+        p32_n = p32 - lr * (update + cfg.weight_decay * p32)
+        if master is not None:
+            if za is not None:
+                p32_n = shard(p32_n, za.names, rules)
+            new_master.append(p32_n)
+        new_p.append(p32_n.astype(p.dtype))
+        new_m.append(m_n)
+        new_v.append(v_n)
+
+    new_params = jax.tree.unflatten(treedef, new_p)
+    new_state = {
+        "step": step,
+        "m": jax.tree.unflatten(treedef, new_m),
+        "v": jax.tree.unflatten(treedef, new_v),
+    }
+    if "master" in opt_state:
+        new_state["master"] = jax.tree.unflatten(treedef, new_master)
+    metrics = {"grad_norm": gn, "lr": jnp.asarray(lr, jnp.float32)}
+    return new_params, new_state, metrics

@@ -1,0 +1,23 @@
+"""Learning-rate schedules (scale factors multiplying AdamWConfig.lr)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup_steps: int):
+    step = jnp.asarray(step, jnp.float32)
+    return jnp.minimum(1.0, (step + 1.0) / jnp.maximum(1.0, float(warmup_steps)))
+
+
+def cosine_schedule(step, warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    """Linear warmup then cosine decay to final_frac of peak."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = linear_warmup(step, warmup_steps)
+    progress = jnp.clip(
+        (step - warmup_steps) / jnp.maximum(1.0, float(total_steps - warmup_steps)),
+        0.0,
+        1.0,
+    )
+    cos = final_frac + (1.0 - final_frac) * 0.5 * (1.0 + jnp.cos(jnp.pi * progress))
+    return jnp.where(step < warmup_steps, warm, cos)

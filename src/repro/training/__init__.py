@@ -1,0 +1,7 @@
+from repro.training.step import (  # noqa: F401
+    TrainStepConfig,
+    make_train_step,
+    make_prefill_step,
+    make_decode_step,
+    make_decode_sample_step,
+)

@@ -1,0 +1,187 @@
+"""Step factories: train (grad-accum, ZeRO, compressed cross-pod DP), serve.
+
+``make_train_step`` builds the jit-able update the launcher (and the
+multi-pod dry-run) lowers:
+
+    (params, opt_state, batch[, err_state]) ->
+        (params', opt_state', metrics[, err_state'])
+
+* **Microbatching / gradient accumulation**: the global batch splits into
+  ``n_micro`` sequential microbatches under ``lax.scan`` with an f32
+  gradient accumulator — the standard activation-memory lever (per-step
+  activation footprint scales 1/n_micro while arithmetic is unchanged).
+* **Compressed cross-pod DP** (optional): the whole grad computation moves
+  inside a partial-auto ``shard_map`` manual over "pod"; intra-pod
+  reduction stays GSPMD-auto over "data" while the inter-pod hop uses the
+  int8 error-feedback psum from ``repro.distributed.compression``.
+* **ZeRO-1**: optimizer moments carry sharding constraints over
+  ("pod","data") via the axes tree (see repro.optim.adamw).
+
+Serving: ``make_prefill_step`` / ``make_decode_step`` close over the config;
+``make_decode_sample_step`` fuses the paper's CIM-MCMC token sampler into
+the decode step (softmax-free sampling on the last-token logits).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import token_sampler
+from repro.distributed.compression import compressed_pmean
+from repro.models import lm
+from repro.optim import AdamWConfig, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    n_micro: int = 1
+    compress_pods: bool = False
+    pod_axis: str = "pod"
+
+
+def _accumulated_grads(loss_fn, vals, batch, n_micro: int):
+    """Mean loss/grads over ``n_micro`` sequential microbatches."""
+    if n_micro <= 1:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            vals, batch
+        )
+        return loss, metrics, grads
+
+    micro = jax.tree.map(
+        lambda x: x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:]),
+        batch,
+    )
+    g0 = jax.tree.map(lambda v: jnp.zeros(v.shape, jnp.float32), vals)
+    zero_metrics = {
+        "ce_loss": jnp.zeros((), jnp.float32),
+        "aux_loss": jnp.zeros((), jnp.float32),
+        "tokens": jnp.zeros((), jnp.float32),
+    }
+
+    def body(carry, mb):
+        g_acc, loss_acc, m_acc = carry
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            vals, mb
+        )
+        g_acc = jax.tree.map(
+            lambda a, g: a + g.astype(jnp.float32) / n_micro, g_acc, grads
+        )
+        m_acc = jax.tree.map(lambda a, m: a + m / n_micro, m_acc, metrics)
+        return (g_acc, loss_acc + loss / n_micro, m_acc), None
+
+    (grads, loss, metrics), _ = jax.lax.scan(
+        body, (g0, jnp.zeros((), jnp.float32), zero_metrics), micro
+    )
+    # tokens were averaged; undo to keep the count semantic
+    metrics = dict(metrics, tokens=metrics["tokens"] * n_micro)
+    return loss, metrics, grads
+
+
+def make_train_step(
+    cfg,
+    axes_tree,
+    opt_cfg: AdamWConfig = AdamWConfig(),
+    schedule_fn: Callable | None = None,
+    step_cfg: TrainStepConfig = TrainStepConfig(),
+    mesh=None,
+):
+    """Returns train_step(vals, opt_state, batch[, err_state])."""
+
+    def loss_fn(vals, batch):
+        return lm.train_loss(vals, cfg, batch)
+
+    def _update(vals, opt_state, loss, metrics, grads):
+        lr_scale = (
+            schedule_fn(opt_state["step"]) if schedule_fn is not None else 1.0
+        )
+        new_vals, new_opt, opt_metrics = adamw_update(
+            grads, opt_state, vals, opt_cfg, lr_scale, axes_tree
+        )
+        out_metrics = {"loss": loss, **metrics, **opt_metrics}
+        return new_vals, new_opt, out_metrics
+
+    if not step_cfg.compress_pods:
+
+        def train_step(vals, opt_state, batch):
+            loss, metrics, grads = _accumulated_grads(
+                loss_fn, vals, batch, step_cfg.n_micro
+            )
+            return _update(vals, opt_state, loss, metrics, grads)
+
+        return train_step
+
+    if mesh is None or step_cfg.pod_axis not in mesh.axis_names:
+        raise ValueError("compress_pods requires a mesh with a 'pod' axis")
+
+    def train_step(vals, opt_state, batch, err_state):
+        def pod_local(vals_, batch_, err_flat_tuple):
+            loss, metrics, grads = _accumulated_grads(
+                loss_fn, vals_, batch_, step_cfg.n_micro
+            )
+            err_ = jax.tree.unflatten(jax.tree.structure(vals_), list(err_flat_tuple))
+            grads, new_err = compressed_pmean(grads, err_, axis=step_cfg.pod_axis)
+            loss = jax.lax.pmean(loss, step_cfg.pod_axis)
+            metrics = jax.tree.map(
+                lambda m: jax.lax.pmean(m, step_cfg.pod_axis), metrics
+            )
+            return loss, metrics, grads, tuple(jax.tree.leaves(new_err))
+
+        n_leaves = len(jax.tree.leaves(vals))
+        loss, metrics, grads, new_err_flat = jax.shard_map(
+            pod_local,
+            mesh=mesh,
+            in_specs=(P(), P(step_cfg.pod_axis), tuple(P() for _ in range(n_leaves))),
+            out_specs=(P(), P(), P(), tuple(P() for _ in range(n_leaves))),
+            axis_names={step_cfg.pod_axis},
+            check_vma=False,
+        )(vals, batch, tuple(jax.tree.leaves(err_state)))
+        new_err = jax.tree.unflatten(jax.tree.structure(err_state), list(new_err_flat))
+        new_vals, new_opt, out_metrics = _update(
+            vals, opt_state, loss, metrics, grads
+        )
+        return new_vals, new_opt, out_metrics, new_err
+
+    return train_step
+
+
+# --- serving -------------------------------------------------------------------
+
+
+def make_prefill_step(cfg):
+    def prefill_step(vals, batch, cache):
+        return lm.prefill(vals, cfg, batch, cache)
+
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    def decode_step(vals, tokens, cache):
+        return lm.decode_step(vals, cfg, tokens, cache)
+
+    return decode_step
+
+
+def make_decode_sample_step(cfg, sampler_cfg: token_sampler.TokenSamplerConfig | None = None):
+    """Decode + the paper's CIM-MCMC token sampler, fused into one step.
+
+    The accept test uses logit differences only — no softmax normaliser is
+    ever computed over the vocabulary (the macro's alpha = p(x*)/p(x)
+    simplification, applied to LLM decode).
+    """
+    scfg = sampler_cfg or token_sampler.TokenSamplerConfig(
+        vocab_size=cfg.vocab_size, n_steps=32
+    )
+
+    def decode_sample_step(vals, tokens, cache, key):
+        logits, new_cache = lm.decode_step(vals, cfg, tokens, cache)
+        result = token_sampler.sample_tokens(
+            key, logits[:, : cfg.vocab_size], scfg, init_tokens=tokens[:, 0]
+        )
+        return result.tokens[:, None], new_cache, result.acceptance_rate
+
+    return decode_sample_step

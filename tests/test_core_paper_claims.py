@@ -1,0 +1,117 @@
+"""Validation of the paper's quantitative claims (§3, §4.2, §6, App. A)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitcell, energy, msxor
+
+
+class TestBitFlipRate:
+    def test_paper_anchor_05v(self):
+        # §3.1: "BFR is around 45% when CVDD lowers to 0.5 V"
+        assert float(bitcell.bit_flip_rate(0.5)) == pytest.approx(0.45, abs=0.01)
+
+    def test_paper_anchor_06v(self):
+        # §4.2: "p_BFR >= 0.4 corresponding to ... 0.6V"
+        assert float(bitcell.bit_flip_rate(0.6)) == pytest.approx(0.40, abs=0.01)
+
+    def test_nominal_supply_is_stable(self):
+        assert float(bitcell.bit_flip_rate(0.8)) < 0.01
+
+    def test_monotone_in_cvdd(self):
+        vs = np.linspace(0.3, 0.8, 26)
+        bfr = np.array([float(bitcell.bit_flip_rate(v)) for v in vs])
+        assert np.all(np.diff(bfr) <= 1e-9)
+
+    def test_thermal_fig15(self):
+        # Fig. 15: p_BFR ~45% flat over 0-70 C; decreases below -20 C
+        for t in (0.0, 25.0, 70.0):
+            assert float(bitcell.bit_flip_rate(0.5, t)) == pytest.approx(
+                0.45, abs=0.012
+            )
+        assert float(bitcell.bit_flip_rate(0.5, -40.0)) < float(
+            bitcell.bit_flip_rate(0.5, 25.0)
+        )
+
+    def test_pseudo_read_statistics(self):
+        key = jax.random.PRNGKey(0)
+        bits = bitcell.pseudo_read_fresh(key, 0.45, shape=(200_000,))
+        assert float(bits.mean()) == pytest.approx(0.45, abs=0.005)
+
+    def test_pseudo_read_flip_is_xor(self):
+        key = jax.random.PRNGKey(1)
+        stored = jnp.ones(10_000, jnp.uint8)
+        flipped = bitcell.pseudo_read_flip(key, stored, 0.45)
+        # every flipped position is 0 where a flip event occurred
+        assert float((flipped == 0).mean()) == pytest.approx(0.45, abs=0.02)
+
+
+class TestMSXOR:
+    def test_lambda3_exact_paper_value(self):
+        # §4.2: "Take p_BFR = 0.4 as an example, lambda_3 = 0.49999872"
+        assert msxor.lambda_recursion(0.4, 3) == pytest.approx(
+            0.49999872, abs=1e-9
+        )
+
+    def test_error_below_1e5_for_p04(self):
+        # abstract: "probability error ... suppressed under 1e-5"
+        assert msxor.debias_error(0.4, 3) < 1e-5
+
+    def test_three_stages_adequate_above_04(self):
+        # §4.2: "when p_BFR >= 0.4 ... 3-stage XOR-gates is adequate"
+        for p in np.linspace(0.40, 0.50, 11):
+            assert msxor.required_stages(float(p), tol=1e-5) <= 3
+
+    def test_corner_case_bound(self):
+        # §4.2 corner simulation: lambda_3 >= 0.4999993981
+        assert msxor.lambda_recursion(0.42, 3) >= 0.4999993981 - 6e-7
+
+    def test_appendix_a_convergence(self):
+        # Appendix A: lim lambda_n = 0.5 for any lambda_0 in (0, 0.5)
+        for p0 in (0.01, 0.1, 0.25, 0.45):
+            assert msxor.lambda_recursion(p0, 32) == pytest.approx(0.5, abs=1e-9)
+
+
+class TestEnergyModel:
+    def test_accepted_sample_energy(self):
+        # §6.4: 0.5065 pJ / accepted sample
+        assert energy.energy_accepted_fj(4) == pytest.approx(506.5, abs=0.1)
+
+    def test_rejected_sample_energy(self):
+        # §6.4: 0.5547 pJ / rejected sample
+        assert energy.energy_rejected_fj(4) == pytest.approx(554.7, abs=0.1)
+
+    def test_energy_band_at_30_40pct_acceptance(self):
+        # §6.4: 0.5331 - 0.5402 pJ at 30-40 % acceptance
+        for ar in (0.30, 0.35, 0.40):
+            e_pj = energy.energy_per_sample_fj(ar, 4) / 1000.0
+            assert 0.530 <= e_pj <= 0.541
+
+    def test_throughput_headline(self):
+        # §6.5 / abstract: 166.7 M samples/s at 4-bit (6 ns loop)
+        assert energy.iteration_time_ns(4) == pytest.approx(6.0)
+        assert energy.throughput_per_chain(4) == pytest.approx(166.7e6, rel=1e-3)
+
+    def test_throughput_above_1e7_up_to_32bit(self):
+        # Fig. 16(b): throughput stays above 1e7 samples/s
+        for nbits in (4, 8, 16, 32):
+            assert energy.throughput_per_chain(nbits) > 1e7
+
+    def test_sub_2x_slowdown_per_bit_doubling(self):
+        # §6.5: "it takes less than twice the time to generate a sample of
+        # double number of bits"
+        for nbits in (4, 8, 16):
+            t1 = energy.iteration_time_ns(nbits)
+            t2 = energy.iteration_time_ns(2 * nbits)
+            assert t2 < 2.0 * t1
+
+    def test_fig17_macro_timing(self):
+        # Fig. 17(c): 1e6 32-bit samples within 1e-3 s
+        assert energy.time_for_samples_s(1_000_000, nbits=32) < 1e-3
+
+    def test_power_matches_gpu_comparison(self):
+        # §6.6: 0.157 mW (GMM) / 1.52e-4 W (MGD) at 32-bit scale
+        p = energy.power_w(nbits=32, accept_ratio=0.35)
+        assert 1e-4 < p < 3e-4

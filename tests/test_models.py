@@ -1,0 +1,249 @@
+"""Model-layer correctness: attention oracle, SSD equivalence, MoE combine,
+prefill/decode consistency, scan/unroll equality."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.models.layers import activation
+
+COMMON = dict(
+    dtype="float32",
+    param_dtype_str="float32",
+    cache_dtype_str="float32",
+    attn_block_q=8,
+    attn_block_kv=8,
+    logits_chunk=16,
+    remat_policy="none",
+)
+
+
+def naive_attention(q, k, v, causal, window, sk_valid=None):
+    """Dense-softmax oracle. q: (B,S,KV,R,dh), k/v: (B,S,KV,dh)."""
+    b, sq, kvh, r, dh = q.shape
+    sk = k.shape[1]
+    s = jnp.einsum("bqkrd,bskd->bkrqs", q, k) / jnp.sqrt(dh)
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if sk_valid is not None:
+        mask &= k_pos < sk_valid
+    if causal:
+        mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkrqs,bskd->bqkrd", p, v)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("sq,sk", [(16, 16), (16, 32), (20, 20), (8, 24)])
+    def test_matches_naive(self, causal, sq, sk):
+        key = jax.random.PRNGKey(0)
+        b, kvh, r, dh = 2, 2, 2, 8
+        q = jax.random.normal(key, (b, sq, kvh, r, dh))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (b, sk, kvh, dh))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (b, sk, kvh, dh))
+        out = attn_mod.flash_attention(
+            q, k, v, causal=causal, window=None, q_offset=0, block_q=8, block_kv=8
+        )
+        ref = naive_attention(q, k, v, causal, None)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+    def test_sliding_window(self):
+        key = jax.random.PRNGKey(3)
+        b, s, kvh, r, dh = 1, 32, 1, 1, 8
+        q = jax.random.normal(key, (b, s, kvh, r, dh))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kvh, dh))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kvh, dh))
+        out = attn_mod.flash_attention(
+            q, k, v, causal=True, window=jnp.int32(8), q_offset=0,
+            block_q=8, block_kv=8,
+        )
+        ref = naive_attention(q, k, v, True, 8)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+    def test_causal_skip_variant_matches(self):
+        key = jax.random.PRNGKey(4)
+        b, s, kvh, r, dh = 1, 64, 2, 1, 8
+        q = jax.random.normal(key, (b, s, kvh, r, dh))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kvh, dh))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kvh, dh))
+        base = attn_mod.flash_attention(
+            q, k, v, causal=True, window=None, q_offset=0, block_q=16, block_kv=16
+        )
+        skip = attn_mod.flash_attention(
+            q, k, v, causal=True, window=None, q_offset=0, block_q=16,
+            block_kv=16, unroll_causal_skip=True,
+        )
+        np.testing.assert_allclose(np.asarray(base), np.asarray(skip), atol=2e-5)
+
+
+class TestSSM:
+    def _cfg(self):
+        return ModelConfig(
+            name="s", family="ssm", n_layers=1, d_model=32, vocab_size=64,
+            ssm_heads=4, ssm_head_dim=8, ssm_state=8, ssm_chunk=8, **COMMON,
+        )
+
+    def test_chunked_matches_recurrence(self):
+        cfg = self._cfg()
+        params = ssm_mod.init_mamba2(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 32))
+        y_chunk, _ = ssm_mod.mamba2_full(params, x, cfg)
+        y_ref = ssm_mod.mamba2_reference(params, x, cfg)
+        np.testing.assert_allclose(
+            np.asarray(y_chunk), np.asarray(y_ref), atol=3e-5
+        )
+
+    def test_prefill_then_decode_matches_full(self):
+        cfg = self._cfg()
+        params = ssm_mod.init_mamba2(jax.random.PRNGKey(2), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(3), (1, 16, 32))
+        y_full, _ = ssm_mod.mamba2_full(params, x, cfg)
+        cache = ssm_mod.init_ssm_cache(cfg, 1, dtype=jnp.float32)
+        y_pre, cache = ssm_mod.mamba2_full(params, x[:, :8], cfg, cache)
+        outs = [y_pre]
+        for t in range(8, 16):
+            o, cache = ssm_mod.mamba2_decode(params, x[:, t : t + 1], cfg, cache)
+            outs.append(o)
+        y_inc = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(
+            np.asarray(y_full), np.asarray(y_inc), atol=3e-5
+        )
+
+
+class TestMoE:
+    def _cfg(self, cap_factor=8.0):
+        return ModelConfig(
+            name="m", family="moe", n_layers=1, d_model=32, n_heads=2,
+            n_kv_heads=2, d_head=16, d_ff=16, vocab_size=64, n_experts=4,
+            moe_top_k=2, moe_capacity_factor=cap_factor, **COMMON,
+        )
+
+    def test_capacity_dispatch_matches_dense(self):
+        """With capacity high enough to drop nothing, the sorted-dispatch
+        path must equal the dense all-experts oracle exactly."""
+        cfg = self._cfg(cap_factor=8.0)
+        params = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
+        out, _ = moe_mod.moe_ffn_local(params, x, cfg, activation("silu"))
+        ref = moe_mod.moe_dense_reference(params, x, cfg, activation("silu"))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+    def test_overflow_drops_are_bounded(self):
+        """Tight capacity drops tokens but output stays finite & bounded."""
+        cfg = self._cfg(cap_factor=0.5)
+        params = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
+        out, aux = moe_mod.moe_ffn_local(params, x, cfg, activation("silu"))
+        assert bool(jnp.all(jnp.isfinite(out)))
+        assert float(aux) > 0
+
+    def test_aux_loss_uniform_routing_floor(self):
+        """Perfectly uniform routing gives aux ~= 1 (Switch normalisation)."""
+        cfg = self._cfg()
+        params = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(2), (4, 64, 32))
+        _, _, aux = moe_mod.route(
+            np.zeros((32, 4), np.float32) + params["router"].value * 0,
+            x.reshape(-1, 32),
+            2,
+        )
+        assert float(aux) == pytest.approx(1.0, abs=0.3)
+
+
+class TestLMConsistency:
+    def _dense_cfg(self):
+        return ModelConfig(
+            name="d", family="dense", n_layers=2, d_model=32, n_heads=2,
+            n_kv_heads=1, d_head=16, d_ff=64, vocab_size=100, **COMMON,
+        )
+
+    def test_prefill_decode_matches_full_forward(self):
+        """Teacher-forced incremental decode must reproduce the full
+        forward logits (KV cache correctness)."""
+        cfg = self._dense_cfg()
+        vals, _ = lm.init_lm_values(jax.random.PRNGKey(0), cfg)
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, 100)
+
+        hidden, _, _ = lm.lm_forward(vals, cfg, {"tokens": tokens}, mode="train")
+        full_logits = lm.head_logits(vals, cfg, hidden)
+
+        cache = lm.init_cache(cfg, 2, 16)
+        logits_p, cache = lm.prefill(vals, cfg, {"tokens": tokens[:, :8]}, cache)
+        np.testing.assert_allclose(
+            np.asarray(logits_p), np.asarray(full_logits[:, 7]), atol=2e-4
+        )
+        for t in range(8, 12):
+            logits_d, cache = lm.decode_step(vals, cfg, tokens[:, t : t + 1], cache)
+            np.testing.assert_allclose(
+                np.asarray(logits_d),
+                np.asarray(full_logits[:, t]),
+                atol=2e-4,
+                err_msg=f"decode step {t}",
+            )
+
+    def test_scan_equals_unroll(self):
+        cfg = self._dense_cfg()
+        vals, _ = lm.init_lm_values(jax.random.PRNGKey(2), cfg)
+        tokens = jax.random.randint(jax.random.PRNGKey(3), (2, 16), 0, 100)
+        batch = {"tokens": tokens, "labels": tokens}
+        l1, _ = lm.train_loss(vals, cfg, batch)
+        l2, _ = lm.train_loss(
+            vals, dataclasses.replace(cfg, scan_layers=False), batch
+        )
+        assert float(l1) == pytest.approx(float(l2), abs=1e-5)
+
+    def test_remat_does_not_change_loss(self):
+        cfg = self._dense_cfg()
+        vals, _ = lm.init_lm_values(jax.random.PRNGKey(4), cfg)
+        tokens = jax.random.randint(jax.random.PRNGKey(5), (2, 16), 0, 100)
+        batch = {"tokens": tokens, "labels": tokens}
+
+        def loss_for(policy):
+            c = dataclasses.replace(cfg, remat_policy=policy)
+            val_, grads = jax.value_and_grad(
+                lambda v: lm.train_loss(v, c, batch)[0]
+            )(vals)
+            return float(val_), grads
+
+        l_none, g_none = loss_for("none")
+        l_full, g_full = loss_for("nothing")
+        assert l_none == pytest.approx(l_full, abs=1e-5)
+        gn = jax.tree.leaves(g_none)[0]
+        gf = jax.tree.leaves(g_full)[0]
+        np.testing.assert_allclose(np.asarray(gn), np.asarray(gf), atol=1e-5)
+
+    def test_vocab_padding_masked(self):
+        """Padded vocab columns must never receive probability mass."""
+        cfg = self._dense_cfg()  # vocab 100 -> padded 256
+        assert cfg.padded_vocab == 256
+        vals, _ = lm.init_lm_values(jax.random.PRNGKey(6), cfg)
+        hidden = jax.random.normal(jax.random.PRNGKey(7), (1, 4, 32))
+        logits = lm.head_logits(vals, cfg, hidden)
+        assert logits.shape[-1] == 256
+        assert float(logits[..., 100:].max()) <= -1e29
+
+    def test_chunked_ce_matches_direct(self):
+        cfg = self._dense_cfg()
+        vals, _ = lm.init_lm_values(jax.random.PRNGKey(8), cfg)
+        hidden = jax.random.normal(jax.random.PRNGKey(9), (2, 16, 32))
+        labels = jax.random.randint(jax.random.PRNGKey(10), (2, 16), 0, 100)
+        loss_c, count = lm.chunked_ce_loss(vals, cfg, hidden, labels)
+        logits = lm.head_logits(vals, cfg, hidden)
+        logz = jax.scipy.special.logsumexp(logits, -1)
+        ll = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+        loss_ref = jnp.mean(logz - ll)
+        assert float(loss_c) == pytest.approx(float(loss_ref), abs=1e-5)
+        assert float(count) == 32
