@@ -2,7 +2,9 @@
 
 Interpret-mode timings validate plumbing, not TPU perf — the TPU-side
 story lives in the dry-run/roofline artifacts.  Reported here: us/call and
-debiased-bits/s (MSXOR) / chain-steps/s (fused MH) for three sizes each.
+debiased-bits/s (MSXOR) / chain-steps/s (fused MH) for three sizes each,
+plus the engine-level scan-vs-pallas delta at matched shapes (same
+randomness backend, same chunking — so the delta is pure executor cost).
 """
 
 import time
@@ -10,7 +12,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import bitcell
+from repro import samplers
 from repro.kernels.mh import ops as mh_ops
 from repro.kernels.msxor import ops as msxor_ops
 
@@ -56,4 +58,31 @@ def run() -> list[dict]:
                 "chain_steps_per_s": f"{b * c * k / dt:.3g}",
             }
         )
+
+    # --- engine execution axis: scan vs pallas, randomness included ------
+    on_tpu = jax.default_backend() == "tpu"
+    for b, c, k in ((1, 64, 64), (8, 256, 64)):
+        table = jax.random.normal(key, (b, 256), jnp.float32)
+        target = samplers.TableTarget(table)
+        init = jnp.zeros((b, c), jnp.uint32)
+        for execution in ("scan", "pallas"):
+            engine = samplers.MHEngine(
+                samplers.EngineConfig(execution=execution, chunk_steps=32)
+            )
+            run_fn = jax.jit(
+                lambda kk, ii, e=engine, t=target, n=k: samplers.run_engine(
+                    kk, ii, engine=e, target=t, n_steps=n
+                ).accept_count
+            )
+            dt = _time(run_fn, key, init)
+            rows.append(
+                {
+                    "bench": "engine_backend",
+                    "execution": execution
+                    + ("" if on_tpu or execution == "scan" else " (interpret)"),
+                    "shape": f"B{b}xC{c}xK{k}",
+                    "us_per_call": round(dt * 1e6, 1),
+                    "chain_steps_per_s": f"{b * c * k / dt:.3g}",
+                }
+            )
     return rows

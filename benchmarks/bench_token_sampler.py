@@ -1,6 +1,10 @@
 """Token-sampler fidelity/latency trade-off (the paper's technique in LLM
 decode position): TV distance to the exact softmax distribution vs MH
-steps, with and without the beyond-paper top-k restriction."""
+steps, with and without the beyond-paper top-k restriction — plus the
+engine's two new axes: scan vs fused-pallas execution (measured latency)
+and host vs cim randomness (measured fidelity/acceptance delta)."""
+
+import time
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +22,19 @@ def _tv_for(cfg, logits, ref, n_runs=300, seed=0):
         counts[int(sample(k)[0])] += 1
     emp = counts / counts.sum()
     return float(0.5 * np.abs(emp - ref).sum())
+
+
+def _latency_us(cfg, logits, reps=20, seed=0):
+    sample = jax.jit(
+        lambda k: token_sampler.sample_tokens(k, logits, cfg).tokens
+    )
+    keys = jax.random.split(jax.random.PRNGKey(seed), reps + 1)
+    jax.block_until_ready(sample(keys[0]))  # compile
+    t0 = time.perf_counter()
+    for k in keys[1:]:
+        out = sample(k)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
 
 
 def run() -> list[dict]:
@@ -70,6 +87,48 @@ def run() -> list[dict]:
                 "variant": f"top_{top_k} (beyond-paper)",
                 "mh_steps": 32,
                 "tv_vs_reference": round(_tv_for(cfg, logits, ref_k, n_runs), 4),
+            }
+        )
+
+    # --- randomness axis: host jax.random vs cim pseudo-read + MSXOR -----
+    for randomness in ("host", "cim"):
+        cfg = token_sampler.TokenSamplerConfig(
+            vocab_size=vocab, n_steps=64, randomness=randomness
+        )
+        tv = _tv_for(cfg, logits, ref_full, n_runs)
+        sample = jax.jit(
+            lambda k: token_sampler.sample_tokens(k, logits, cfg).acceptance_rate
+        )
+        acc = float(
+            np.mean([sample(k) for k in jax.random.split(jax.random.PRNGKey(1), 32)])
+        )
+        rows.append(
+            {
+                "bench": "token_sampler_randomness",
+                "randomness": randomness,
+                "mh_steps": 64,
+                "tv_vs_reference": round(tv, 4),
+                "acceptance": round(acc, 3),
+            }
+        )
+
+    # --- execution axis: lax.scan vs fused pallas (interpret off-TPU) ----
+    batch_logits = jnp.asarray(
+        np.random.default_rng(1).normal(size=(8, vocab)) * 2.0, jnp.float32
+    )
+    on_tpu = jax.default_backend() == "tpu"
+    for execution in ("scan", "pallas"):
+        cfg = token_sampler.TokenSamplerConfig(
+            vocab_size=vocab, n_steps=64, execution=execution
+        )
+        rows.append(
+            {
+                "bench": "token_sampler_backend",
+                "execution": execution
+                + ("" if on_tpu or execution == "scan" else " (interpret)"),
+                "batch": batch_logits.shape[0],
+                "mh_steps": 64,
+                "us_per_batch": round(_latency_us(cfg, batch_logits), 1),
             }
         )
     return rows

@@ -44,6 +44,8 @@ def main():
     print(f"\n  samples          : {stats.n_samples}")
     print(f"  acceptance       : {stats.acceptance_rate:.3f}")
     print(f"  energy/sample    : {stats.energy_per_sample_pj:.4f} pJ "
+          f"(kept samples; amortizes burn-in)")
+    print(f"  energy/step      : {stats.energy_pj / stats.n_steps:.4f} pJ "
           f"(paper: 0.533-0.540 pJ at 4-bit; scales with width)")
     print(f"  modeled time     : {stats.modeled_time_s * 1e6:.1f} us "
           f"for {stats.n_steps} chain steps")

@@ -5,11 +5,13 @@
 #   msxor         multi-stage XOR debiasing (lambda recursion + folds)
 #   uniform_rng   accurate [0,1] RNG (reset -> pseudo-read -> MSXOR -> pack)
 #   proposal      bit-flip proposal + symmetric transfer matrix
-#   metropolis    vectorised Metropolis-Hastings engine (lax.scan)
+#   metropolis    Metropolis-Hastings API (wraps repro.samplers engine)
 #   macro         compartment-parallel macro + 28 nm energy/time ledger
 #   energy        calibrated per-op energy/latency model (paper Fig. 14/16)
 #   targets       GMM / MGD / categorical targets + grid codecs
 #   token_sampler softmax-free MCMC token sampling for LLM decode
+#
+# The MH step itself lives exactly once, in repro/samplers (DESIGN.md §2).
 
 from repro.core import (  # noqa: F401
     bitcell,

@@ -3,9 +3,17 @@
 Behavioural twin of the paper's 256 kb macro (§4-§6): 64 compartments of
 64x64 bitcells, each running an independent MH chain in lock-step, a shared
 accurate-[0,1] RNG, and the three working modes (memory / block-wise RNG /
-CIM copy).  The sampling path is the `repro.core.metropolis` engine; the
-macro layer adds the compartment geometry, operating-condition -> p_BFR
-mapping, and the 28 nm energy/timing ledger.
+CIM copy).  The sampling path is ``metropolis.run_chain`` — a thin
+wrapper over the unified sampler engine (``repro.samplers``, DESIGN.md
+§2) — so the macro rides the engine's jit cache; the macro layer adds
+the compartment geometry, operating-condition -> p_BFR mapping, and the
+28 nm energy/timing ledger.
+
+Metric definitions (paper Fig. 16, see DESIGN.md §4): the energy/time
+ledger charges *every* chain step (burn-in and thinned-away steps cost
+real energy), while ``energy_per_sample_pj`` and
+``throughput_samples_per_s`` are normalised by the *kept* sample count —
+the samples a user actually receives.
 """
 
 from __future__ import annotations
@@ -53,15 +61,20 @@ class MacroConfig:
     def p_bfr(self) -> float:
         return float(bitcell.bit_flip_rate(self.cvdd_pseudo_read, self.temp_c))
 
+    @property
+    def sample_nbits(self) -> int:
+        return min(self.nbits, 32)
+
     def mh_config(self) -> metropolis.MHConfig:
         return metropolis.MHConfig(
-            nbits=min(self.nbits, 32),
+            nbits=self.sample_nbits,
             p_bfr=self.p_bfr,
             rng_p_bfr=self.p_bfr,
             rng_stages=self.rng_stages,
             rng_bit_width=self.rng_bit_width,
             burn_in=self.burn_in,
             thin=self.thin,
+            randomness="cim",            # the macro IS the CIM pipeline
         )
 
 
@@ -72,8 +85,8 @@ class MacroRunStats:
     acceptance_rate: float
     energy_pj: float
     modeled_time_s: float
-    energy_per_sample_pj: float
-    throughput_samples_per_s: float
+    energy_per_sample_pj: float          # total energy / KEPT samples
+    throughput_samples_per_s: float      # KEPT samples / modeled time
 
 
 class CIMMacro:
@@ -106,12 +119,11 @@ class CIMMacro:
         count per chain is ceil(n_samples / n_compartments).
         """
         cfg = self.config
-        mh_cfg = cfg.mh_config()
         per_chain = -(-n_samples // cfg.n_compartments)
         result = metropolis.run_chain(
             key,
             log_prob_fn,
-            mh_cfg,
+            cfg.mh_config(),
             n_samples=per_chain,
             chain_shape=(cfg.n_compartments,),
             init_words=init_words,
@@ -120,6 +132,7 @@ class CIMMacro:
 
         n_steps_total = int(result.n_steps) * cfg.n_compartments
         n_accepted = int(jnp.sum(result.final.accept_count))
+        n_kept = int(samples.size)
         ledger = energy.EnergyLedger(
             n_steps=n_steps_total,
             n_accepted=n_accepted,
@@ -127,14 +140,14 @@ class CIMMacro:
             n_chains=cfg.n_compartments,
         )
         stats = MacroRunStats(
-            n_samples=int(samples.size),
+            n_samples=n_kept,
             n_steps=n_steps_total,
             acceptance_rate=float(result.acceptance_rate),
             energy_pj=ledger.energy_pj,
             modeled_time_s=ledger.time_s,
-            energy_per_sample_pj=ledger.energy_pj / max(1, n_steps_total),
+            energy_per_sample_pj=ledger.energy_pj / max(1, n_kept),
             throughput_samples_per_s=(
-                n_steps_total / ledger.time_s if ledger.time_s > 0 else float("inf")
+                n_kept / ledger.time_s if ledger.time_s > 0 else float("inf")
             ),
         )
         return samples, stats

@@ -1,4 +1,4 @@
-"""Vectorised Metropolis–Hastings engine — paper Algorithm 1 + §3.2.
+"""Vectorised Metropolis–Hastings — paper Algorithm 1 + §3.2.
 
 The chain state is a block of k-bit integer words, one word per compartment
 (the paper's macro runs 64 compartments in lock-step; here the compartment
@@ -9,6 +9,10 @@ axis is an arbitrary batch shape).  Each step:
   3. accept iff u < min(1, p(x*) / p(x)) — q cancels by symmetry (paper §3.2)
   4. "in-memory copy": accepted candidates overwrite the state; rejected
      compartments re-copy the previous value (costed in the energy model)
+
+This module is a thin, API-compatible wrapper over the unified sampler
+engine (``repro.samplers``); the step body lives there exactly once
+(DESIGN.md §2).
 
 Note: paper §4.2 contains the typo "if p(x^(i)) > u * p(x*) ... accept"; we
 implement the correct test from the paper's own Algorithm 1
@@ -24,7 +28,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import proposal, uniform_rng
+from repro import samplers
 
 Array = jnp.ndarray
 LogProbFn = Callable[[Array], Array]
@@ -40,10 +44,23 @@ class MHConfig:
                                       # accept test for peaked targets)
     burn_in: int = 500                # paper §2.1: empirical 500-1000
     thin: int = 1
+    randomness: str = "cim"           # host | cim randomness backend
+    chunk_steps: int = 64             # randomness streaming granularity
 
     def __post_init__(self):
         if not 1 <= self.nbits <= 32:
             raise ValueError(f"nbits must be in [1,32], got {self.nbits}")
+
+    def engine_config(self) -> samplers.EngineConfig:
+        return samplers.EngineConfig(
+            p_bfr=self.p_bfr,
+            randomness=self.randomness,
+            rng_p_bfr=self.rng_p_bfr,
+            rng_bit_width=self.rng_bit_width,
+            rng_stages=self.rng_stages,
+            execution="scan",          # callable targets: no table for pallas
+            chunk_steps=self.chunk_steps,
+        )
 
 
 class MHStepState(NamedTuple):
@@ -57,28 +74,6 @@ class MHResult(NamedTuple):
     final: MHStepState
     n_steps: jnp.int32
     acceptance_rate: Array  # scalar float32
-
-
-def mh_step(key, state: MHStepState, log_prob_fn: LogProbFn, cfg: MHConfig):
-    """One MH iteration over the whole compartment block."""
-    k_prop, k_u = jax.random.split(key)
-    cand = proposal.propose_bitflip(k_prop, state.words, cfg.p_bfr, cfg.nbits)
-    logp_cand = log_prob_fn(cand)
-    u = uniform_rng.uniform(
-        k_u, state.words.shape, cfg.rng_p_bfr, cfg.rng_bit_width, cfg.rng_stages
-    )
-    delta = logp_cand - state.log_prob
-    # accept iff u < min(1, exp(delta)); u in [0,1) so delta >= 0 always accepts.
-    accept = u < jnp.exp(jnp.minimum(delta, 0.0))
-    # reject any candidate with log p = -inf (e.g. out-of-support words)
-    accept = jnp.logical_and(accept, jnp.isfinite(logp_cand))
-    new_words = jnp.where(accept, cand, state.words)          # in-memory copy
-    new_logp = jnp.where(accept, logp_cand, state.log_prob)
-    return MHStepState(
-        words=new_words,
-        log_prob=new_logp,
-        accept_count=state.accept_count + accept.astype(jnp.int32),
-    )
 
 
 @partial(
@@ -107,32 +102,24 @@ def run_chain(
     else:
         init_words = jnp.broadcast_to(init_words, chain_shape).astype(jnp.uint32)
 
-    init = MHStepState(
-        words=init_words,
-        log_prob=log_prob_fn(init_words).astype(jnp.float32),
-        accept_count=jnp.zeros(chain_shape, dtype=jnp.int32),
-    )
-
     n_steps = cfg.burn_in + n_samples * cfg.thin
+    engine = samplers.MHEngine(cfg.engine_config())
+    target = samplers.CallableTarget(log_prob_fn, cfg.nbits)
+    res = engine.run(key, target, n_steps, init_words)
 
-    def body(state, step_key):
-        new_state = mh_step(step_key, state, log_prob_fn, cfg)
-        return new_state, new_state.words
-
-    keys = jax.random.split(key, n_steps)
-    final, all_words = jax.lax.scan(body, init, keys)
-
-    kept = all_words[cfg.burn_in :]
+    kept = res.samples[cfg.burn_in :]
     if cfg.thin > 1:
         kept = kept[cfg.thin - 1 :: cfg.thin]
 
-    total = jnp.float32(n_steps) * jnp.float32(max(1, int(jnp.size(init.words))))
-    acc_rate = jnp.sum(final.accept_count).astype(jnp.float32) / total
     return MHResult(
         samples=kept,
-        final=final,
+        final=MHStepState(
+            words=res.final_words,
+            log_prob=res.final_logp,
+            accept_count=res.accept_count,
+        ),
         n_steps=jnp.int32(n_steps),
-        acceptance_rate=acc_rate,
+        acceptance_rate=res.acceptance_rate,
     )
 
 

@@ -9,6 +9,11 @@ No logsumexp over the vocabulary is ever computed.
 Out-of-vocab proposals (V is rarely a power of two) have p = 0 and are
 always rejected, which preserves detailed balance restricted to [0, V).
 
+This module is an API-compatible wrapper over the unified sampler engine
+(``repro.samplers``): the chain itself lives there once, and the
+``execution`` / ``randomness`` fields select the lax.scan vs fused-Pallas
+executor and the host vs CIM randomness pipeline (DESIGN.md §2).
+
 Statistical behaviour: with p_BFR ~ 0.45 the proposal is a near-uniform
 independence sampler over the 2^k hypercube, so the chain mixes in O(1/p_max)
 steps for heavy-tailed targets and benefits from temperature warm-up for
@@ -27,7 +32,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import proposal, uniform_rng
+from repro import samplers
 
 Array = jnp.ndarray
 
@@ -42,24 +47,31 @@ class TokenSamplerConfig:
     temperature: float = 1.0
     top_k: int = 0                    # 0 = full vocab (paper-faithful);
                                       # >0 restricts the chain to top-k logits
+    execution: str = "auto"           # auto | scan | pallas (engine dispatch)
+    randomness: str = "cim"           # cim | host randomness backend
+    chunk_steps: int = 64             # randomness streaming granularity
 
     @property
     def nbits(self) -> int:
         space = self.top_k if self.top_k > 0 else self.vocab_size
         return max(1, math.ceil(math.log2(space)))
 
+    def engine_config(self) -> samplers.EngineConfig:
+        return samplers.EngineConfig(
+            p_bfr=self.p_bfr,
+            randomness=self.randomness,
+            rng_p_bfr=self.p_bfr,
+            rng_bit_width=self.rng_bit_width,
+            rng_stages=self.rng_stages,
+            execution=self.execution,
+            chunk_steps=self.chunk_steps,
+        )
+
 
 class TokenSampleResult(NamedTuple):
     tokens: Array            # (batch,) int32 sampled token ids
     acceptance_rate: Array   # scalar float32
     final_logp: Array        # (batch,) float32 unnormalised log-prob
-
-
-def _gather_logits(logits: Array, words: Array, vocab: int) -> Array:
-    """logits: (B, V), words: (B,) -> (B,) with -inf outside [0, V)."""
-    safe = jnp.clip(words.astype(jnp.int32), 0, vocab - 1)
-    vals = jnp.take_along_axis(logits, safe[:, None], axis=-1)[:, 0]
-    return jnp.where(words.astype(jnp.int32) < vocab, vals, -jnp.inf)
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -75,46 +87,17 @@ def sample_tokens(
     the macro's "initial value x^(0) written into the bitcells"); defaults
     to the argmax, which guarantees a finite-logp start.
     """
-    batch, vocab = logits.shape
-    if cfg.top_k > 0:
-        # beyond-paper: restrict the word space to the top-k logits
-        top_vals, top_idx = jax.lax.top_k(logits, cfg.top_k)
-        work_logits = top_vals / cfg.temperature
-        space = cfg.top_k
-    else:
-        top_idx = None
-        work_logits = logits / cfg.temperature
-        space = vocab
-
-    if init_tokens is None:
-        init_words = jnp.argmax(work_logits, axis=-1).astype(jnp.uint32)
-    else:
-        init_words = jnp.clip(init_tokens.astype(jnp.uint32), 0, space - 1)
-
-    init_logp = _gather_logits(work_logits, init_words, space)
-
-    def body(carry, step_key):
-        words, logp, acc = carry
-        k_prop, k_u = jax.random.split(step_key)
-        cand = proposal.propose_bitflip(k_prop, words, cfg.p_bfr, cfg.nbits)
-        logp_cand = _gather_logits(work_logits, cand, space)
-        u = uniform_rng.uniform(
-            k_u, words.shape, cfg.p_bfr, cfg.rng_bit_width, cfg.rng_stages
-        )
-        delta = logp_cand - logp
-        accept = jnp.logical_and(
-            u < jnp.exp(jnp.minimum(delta, 0.0)), jnp.isfinite(logp_cand)
-        )
-        words = jnp.where(accept, cand, words)
-        logp = jnp.where(accept, logp_cand, logp)
-        return (words, logp, acc + accept.astype(jnp.int32)), None
-
-    keys = jax.random.split(key, cfg.n_steps)
-    (words, logp, acc), _ = jax.lax.scan(body, (init_words, init_logp, jnp.zeros(batch, jnp.int32)), keys)
-
-    if top_idx is not None:
-        tokens = jnp.take_along_axis(top_idx, words.astype(jnp.int32)[:, None], axis=-1)[:, 0]
-    else:
-        tokens = words.astype(jnp.int32)
-    acc_rate = jnp.sum(acc).astype(jnp.float32) / jnp.float32(batch * cfg.n_steps)
-    return TokenSampleResult(tokens=tokens, acceptance_rate=acc_rate, final_logp=logp)
+    engine = samplers.MHEngine(cfg.engine_config())
+    tokens, result = engine.sample_tokens(
+        key,
+        logits,
+        n_steps=cfg.n_steps,
+        temperature=cfg.temperature,
+        top_k=cfg.top_k,
+        init_tokens=init_tokens,
+    )
+    return TokenSampleResult(
+        tokens=tokens,
+        acceptance_rate=result.acceptance_rate,
+        final_logp=result.final_logp[:, 0],
+    )

@@ -100,8 +100,16 @@ def rules_for_config(cfg) -> ShardingRules:
 
 
 def active_mesh():
-    """The abstract mesh from ``jax.set_mesh``; None when not set."""
-    mesh = jax.sharding.get_abstract_mesh()
+    """The abstract mesh from ``jax.set_mesh``; None when not set.
+
+    Older jax releases predate ``get_abstract_mesh`` (and the AxisType
+    machinery); treat them as "no ambient mesh" so single-process paths
+    (serve/examples on CPU) still run.
+    """
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is None:
+        return None
+    mesh = get()
     if mesh is None or mesh.empty:
         return None
     return mesh

@@ -57,7 +57,11 @@ def generate_randomness(
     p_bfr: float,
     rng_stages: int = 3,
 ) -> MHRandomness:
-    """Paper-faithful randomness: pseudo-read bit-planes + MSXOR uniforms."""
+    """Paper-faithful randomness: pseudo-read bit-planes + MSXOR uniforms.
+
+    Materialises the full (K, B, C) operand block up front — fine for
+    kernel tests/benchmarks, but long chains should stream chunks via
+    ``repro.samplers.CIMRandomness`` instead (DESIGN.md §2)."""
     k_flip, k_u = jax.random.split(key)
     flips = bitcell.raw_random_words(
         k_flip, p_bfr, (n_steps, batch, chains), nbits=32
@@ -103,14 +107,20 @@ def sample_tokens_fused(
 ):
     """Serving-path token sampler: one fused MH chain per batch row.
 
-    Returns (tokens (B,) int32, acceptance_rate scalar).
+    Thin wrapper over the unified engine with pallas execution forced —
+    kept so kernel-level callers keep a one-call entry.  Returns
+    (tokens (B,) int32, acceptance_rate scalar).
     """
-    b = logits.shape[0]
-    table = logits.astype(jnp.float32) / temperature
-    init = None if prev_tokens is None else prev_tokens.astype(jnp.uint32)[:, None]
-    samples, accept = mh_sample_with_rng(
-        key, table, n_steps=n_steps, chains=1, p_bfr=p_bfr, init=init
+    from repro import samplers  # deferred: samplers imports this module
+
+    engine = samplers.MHEngine(
+        samplers.EngineConfig(p_bfr=p_bfr, execution="pallas")
     )
-    tokens = samples[-1, :, 0].astype(jnp.int32)
-    acc_rate = jnp.sum(accept).astype(jnp.float32) / jnp.float32(b * n_steps)
-    return tokens, acc_rate
+    tokens, result = engine.sample_tokens(
+        key,
+        logits,
+        n_steps=n_steps,
+        temperature=temperature,
+        init_tokens=prev_tokens,
+    )
+    return tokens, result.acceptance_rate

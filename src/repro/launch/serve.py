@@ -11,9 +11,14 @@ This is the batch-continuous ("continuous batching"-lite) discipline real
 LLM servers use, sized down to run on CPU with smoke configs; the decode
 step is the same function the dry-run lowers for the 256/512-chip meshes.
 
+``--backend`` selects the MCMC execution substrate (DESIGN.md §2):
+``scan`` runs the pure-JAX chain, ``pallas`` routes decode through the
+fused MH kernel (compiled on TPU, interpret mode on CPU), ``auto`` picks
+by ``jax.default_backend()``.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch granite3_8b --smoke \
-      --requests 8 --prompt-len 12 --gen 16 --sampler mcmc
+      --requests 8 --prompt-len 12 --gen 16 --sampler mcmc --backend scan
 """
 
 from __future__ import annotations
@@ -37,6 +42,7 @@ class ServeConfig:
     max_len: int = 128
     gen_tokens: int = 16
     sampler: str = "mcmc"            # mcmc | categorical | greedy
+    backend: str = "auto"            # auto | scan | pallas (MCMC execution)
     mcmc_steps: int = 32
     temperature: float = 1.0
     seed: int = 0
@@ -69,6 +75,7 @@ class BatchedServer:
             vocab_size=cfg.vocab_size,
             n_steps=serve_cfg.mcmc_steps,
             temperature=serve_cfg.temperature,
+            execution=serve_cfg.backend,
         )
         # slot state
         self.cache = lm.init_cache(cfg, serve_cfg.n_slots, serve_cfg.max_len)
@@ -165,6 +172,14 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--sampler", default="mcmc", choices=["mcmc", "categorical", "greedy"])
+    ap.add_argument(
+        "--backend",
+        default="auto",
+        choices=["auto", "scan", "pallas"],
+        help="MCMC execution backend: pure-JAX scan or the fused Pallas "
+        "kernel (interpret mode off-TPU); auto dispatches on "
+        "jax.default_backend()",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -178,6 +193,7 @@ def main():
         max_len=args.prompt_len + args.gen + 8,
         gen_tokens=args.gen,
         sampler=args.sampler,
+        backend=args.backend,
         seed=args.seed,
     )
     server = BatchedServer(cfg, scfg)
@@ -192,9 +208,10 @@ def main():
     total_tokens = sum(
         len(r.out_tokens) for r in server.slot_req if r is not None
     )
+    backend_note = f", backend={args.backend}" if args.sampler == "mcmc" else ""
     print(
         f"[serve] {args.requests} requests x {args.gen} tokens "
-        f"({args.sampler}): {total_tokens} tokens in {dt:.2f}s "
+        f"({args.sampler}{backend_note}): {total_tokens} tokens in {dt:.2f}s "
         f"({total_tokens / dt:.1f} tok/s)"
     )
     if server.acceptance:

@@ -1,0 +1,32 @@
+# The unified MH sampler engine (DESIGN.md §2): one Metropolis–Hastings
+# datapath, pluggable on three orthogonal axes —
+#
+#   targets      what the chain samples (callable log-prob / (B,V) table /
+#                top-k-restricted logits)
+#   randomness   where the random operands come from (host jax.random vs
+#                the CIM pseudo-read + MSXOR pipeline), streamed in chunks
+#   engine       how steps execute (pure-JAX lax.scan vs the fused Pallas
+#                kernel), auto-dispatched by jax.default_backend()
+#
+# core/metropolis.py, core/token_sampler.py, core/macro.py and
+# launch/serve.py are all thin layers over this package.
+
+from repro.samplers.engine import (  # noqa: F401
+    EngineConfig,
+    EngineResult,
+    MHEngine,
+    resolve_execution,
+    run_engine,
+)
+from repro.samplers.randomness import (  # noqa: F401
+    CIMRandomness,
+    HostRandomness,
+    RandomnessBackend,
+    make_randomness_backend,
+)
+from repro.samplers.targets import (  # noqa: F401
+    CallableTarget,
+    TableTarget,
+    TopKTarget,
+    logits_target,
+)

@@ -1,0 +1,267 @@
+"""The unified Metropolis–Hastings engine — one MH datapath, three axes.
+
+Every MCMC workload in this repo is the same four-phase step (paper
+Fig. 14): pseudo-read proposal, accurate-[0,1] accept threshold, accept
+test on the log-prob ratio, in-memory copy.  ``MHEngine`` implements that
+step exactly once and exposes three orthogonal, pluggable axes
+(DESIGN.md §2):
+
+  * **target**      — ``CallableTarget`` / ``TableTarget`` / ``TopKTarget``
+  * **randomness**  — ``host`` (plain jax.random) vs ``cim`` (pseudo-read
+                      bit-planes + MSXOR-debiased uniforms)
+  * **execution**   — ``scan`` (pure-JAX ``lax.scan``) vs ``pallas`` (the
+                      fused VMEM-resident kernel), with ``auto`` picking
+                      by ``jax.default_backend()``
+
+The two executors consume identical randomness operands and mirror each
+other op-for-op, so with the same key they produce bit-identical sample
+streams (asserted in tests/test_sampler_engine.py).  Randomness streams
+in chunks of ``chunk_steps`` — operands for step ``t`` depend only on
+``(key, t)`` — so chains of any length run in O(chunk) operand memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.samplers.randomness import (
+    RandomnessBackend,
+    make_randomness_backend,
+)
+from repro.samplers.targets import (
+    CallableTarget,
+    TableTarget,
+    TopKTarget,
+    logits_target,
+)
+
+Array = jnp.ndarray
+
+_EXECUTION_CHOICES = ("auto", "scan", "pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static configuration of the engine's randomness/execution axes."""
+
+    p_bfr: float = 0.45              # proposal bit-flip rate (pseudo-read)
+    randomness: str = "cim"          # host | cim
+    rng_p_bfr: float | None = None   # [0,1]-RNG raw-bit bias (default p_bfr)
+    rng_bit_width: int = 16          # u precision (cim backend)
+    rng_stages: int = 3              # MSXOR stages (cim backend)
+    execution: str = "auto"          # auto | scan | pallas
+    chunk_steps: int = 64            # randomness streaming granularity
+    block_c: int = 256               # pallas chain-axis block size
+
+    def __post_init__(self):
+        if self.execution not in _EXECUTION_CHOICES:
+            raise ValueError(
+                f"execution must be one of {_EXECUTION_CHOICES}, "
+                f"got {self.execution!r}"
+            )
+        if self.randomness not in ("host", "cim"):
+            raise ValueError(
+                f"randomness must be host|cim, got {self.randomness!r}"
+            )
+        if self.chunk_steps < 1:
+            raise ValueError(f"chunk_steps must be >= 1, got {self.chunk_steps}")
+
+    def backend(self) -> RandomnessBackend:
+        return make_randomness_backend(
+            self.randomness,
+            p_bfr=self.p_bfr,
+            rng_p_bfr=self.rng_p_bfr,
+            rng_bit_width=self.rng_bit_width,
+            rng_stages=self.rng_stages,
+        )
+
+
+class EngineResult(NamedTuple):
+    samples: Array          # (K, *chain_shape) uint32 post-step states
+    accept_count: Array     # (*chain_shape,) int32
+    acceptance_rate: Array  # scalar float32
+    final_words: Array      # (*chain_shape,) uint32
+    final_logp: Array       # (*chain_shape,) float32
+    n_steps: jnp.int32
+
+
+def resolve_execution(execution: str, target) -> str:
+    """Backend dispatch rule (DESIGN.md §2): explicit override wins;
+    ``auto`` = fused kernel on TPU for table targets, scan elsewhere."""
+    if execution == "pallas":
+        if target.table is None:
+            raise ValueError(
+                "pallas execution needs a table target (the fused kernel "
+                "holds the distribution in VMEM); use a TableTarget or "
+                "execution='scan'"
+            )
+        return "pallas"
+    if execution == "scan":
+        return "scan"
+    if target.table is not None and jax.default_backend() == "tpu":
+        return "pallas"
+    return "scan"
+
+
+def _mh_step(target, nbits: int, words, logp, acc, flip, u):
+    """THE MH step — the only scan-side implementation in the repo.
+
+    Mirrors the Pallas kernel body (kernels/mh/mh.py:_mh_kernel)
+    op-for-op: XOR-propose, table/fn lookup, u < exp(min(dlogp, 0))
+    accept, select (in-memory copy).
+    """
+    mask = jnp.uint32((1 << nbits) - 1)
+    cand = jnp.bitwise_xor(words, flip & mask)
+    logp_cand = target.log_prob(cand).astype(jnp.float32)
+    delta = logp_cand - logp
+    accept = jnp.logical_and(
+        u < jnp.exp(jnp.minimum(delta, 0.0)), jnp.isfinite(logp_cand)
+    )
+    words = jnp.where(accept, cand, words)        # in-memory copy
+    logp = jnp.where(accept, logp_cand, logp)
+    return words, logp, acc + accept.astype(jnp.int32)
+
+
+def _scan_span(target, nbits, carry, flips, u):
+    """Scan the step body over one chunk of pre-generated operands."""
+
+    def body(c, xs):
+        words, logp, acc = c
+        words, logp, acc = _mh_step(target, nbits, words, logp, acc, *xs)
+        return (words, logp, acc), words
+
+    return jax.lax.scan(body, carry, (flips, u))
+
+
+def _run_scan(key, target, backend, nbits, n_steps, chunk, init_words):
+    shape = init_words.shape
+    carry = (
+        init_words.astype(jnp.uint32),
+        target.log_prob(init_words.astype(jnp.uint32)).astype(jnp.float32),
+        jnp.zeros(shape, jnp.int32),
+    )
+    chunk = max(1, min(chunk, n_steps))
+    n_full, rem = divmod(n_steps, chunk)
+    pieces = []
+    if n_full:
+
+        def outer(c, start):
+            flips, u = backend.chunk(key, start, chunk, shape, nbits)
+            return _scan_span(target, nbits, c, flips, u)
+
+        starts = jnp.arange(n_full, dtype=jnp.int32) * chunk
+        carry, stacked = jax.lax.scan(outer, carry, starts)
+        pieces.append(stacked.reshape(n_full * chunk, *shape))
+    if rem:
+        flips, u = backend.chunk(key, n_full * chunk, rem, shape, nbits)
+        carry, tail = _scan_span(target, nbits, carry, flips, u)
+        pieces.append(tail)
+    samples = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, 0)
+    words, logp, acc = carry
+    return samples, acc, words, logp
+
+
+def _run_pallas(key, target, backend, nbits, n_steps, chunk, block_c, init_words):
+    from repro.kernels.mh import ops as mh_ops  # avoid import cycle
+
+    if init_words.ndim != 2:
+        raise ValueError(
+            f"pallas execution expects (B, C) chain state, got {init_words.shape}"
+        )
+    state = init_words.astype(jnp.uint32)
+    acc = jnp.zeros(state.shape, jnp.int32)
+    pieces = []
+    for start in range(0, n_steps, chunk):
+        n = min(chunk, n_steps - start)
+        flips, u = backend.chunk(key, start, n, state.shape, nbits)
+        samples, a = mh_ops.mh_sample(
+            target.table, state, flips, u, nbits=nbits, block_c=block_c
+        )
+        state = samples[-1]
+        acc = acc + a
+        pieces.append(samples)
+    samples = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, 0)
+    logp = target.log_prob(state).astype(jnp.float32)
+    return samples, acc, state, logp
+
+
+class MHEngine:
+    """One MH engine, pluggable on all three axes.
+
+    Methods are traceable (no internal ``jax.jit``) so thin wrappers can
+    jit at whatever boundary fits their API; ``run_engine`` below is the
+    ready-made jitted entry.
+    """
+
+    def __init__(self, config: EngineConfig = EngineConfig()):
+        self.config = config
+        self._backend = config.backend()
+
+    @property
+    def randomness(self) -> RandomnessBackend:
+        return self._backend
+
+    def run(self, key, target, n_steps: int, init_words) -> EngineResult:
+        """Run ``n_steps`` of MH from ``init_words``; collect every state.
+
+        ``init_words``: (B, C) for table targets (B independent targets x
+        C lock-step chains), any shape for callable targets.
+        """
+        if n_steps < 1:
+            raise ValueError(f"n_steps must be >= 1, got {n_steps}")
+        execution = resolve_execution(self.config.execution, target)
+        args = (key, target, self._backend, target.nbits, n_steps,
+                self.config.chunk_steps)
+        if execution == "scan":
+            samples, acc, words, logp = _run_scan(*args, init_words)
+        else:
+            samples, acc, words, logp = _run_pallas(
+                *args, self.config.block_c, init_words
+            )
+        total = jnp.float32(n_steps) * jnp.float32(max(1, init_words.size))
+        return EngineResult(
+            samples=samples,
+            accept_count=acc,
+            acceptance_rate=jnp.sum(acc).astype(jnp.float32) / total,
+            final_words=words,
+            final_logp=logp,
+            n_steps=jnp.int32(n_steps),
+        )
+
+    def sample_tokens(
+        self,
+        key,
+        logits,
+        n_steps: int,
+        temperature: float = 1.0,
+        top_k: int = 0,
+        init_tokens=None,
+    ) -> tuple[Array, EngineResult]:
+        """Draw one token per row of ``logits`` (B, V): one chain per row.
+
+        Returns (tokens (B,) int32, full EngineResult).  ``init_tokens``
+        seeds the chains (the macro's x^(0) written into the bitcells);
+        defaults to the row argmax — a guaranteed finite-logp start.
+        """
+        target = logits_target(logits, temperature=temperature, top_k=top_k)
+        if init_tokens is None:
+            init = jnp.argmax(target.table, axis=-1).astype(jnp.uint32)
+        else:
+            init = jnp.clip(
+                init_tokens.astype(jnp.uint32), 0, target.table.shape[-1] - 1
+            )
+        result = self.run(key, target, n_steps, init[:, None])
+        tokens = target.decode(result.final_words)[:, 0].astype(jnp.int32)
+        return tokens, result
+
+
+@partial(jax.jit, static_argnames=("engine", "target", "n_steps"))
+def run_engine(key, init_words, *, engine: MHEngine, target, n_steps: int):
+    """Jitted engine entry.  ``engine`` and ``target`` are identity-hashed
+    statics — reuse the same instances across calls to reuse the trace."""
+    return engine.run(key, target, n_steps, init_words)

@@ -1,0 +1,127 @@
+"""Randomness axis of the sampler engine — where the MH random bits come from.
+
+One MH step consumes two random operands per chain (paper Fig. 14):
+
+  * a *flip word* whose low ``nbits`` bit-planes are i.i.d.
+    Bernoulli(p_BFR) — the block-wise pseudo-read proposal, and
+  * a uniform ``u`` in [0, 1) — the accurate-[0,1]-RNG accept threshold.
+
+Two backends implement the same ``RandomnessBackend`` protocol:
+
+  * ``HostRandomness`` — plain ``jax.random``: ideal float32 uniforms and
+    directly-drawn Bernoulli bit-planes.  The software baseline.
+  * ``CIMRandomness``  — the paper's circuit pipeline: biased pseudo-read
+    bit-planes (``bitcell.raw_random_words``) for the proposal, and
+    reset -> pseudo-read -> MSXOR-fold -> pack for ``u``
+    (``uniform_rng.uniform``), including the residual debias error.
+
+Chunked streaming contract (DESIGN.md §2): the operands for step ``t``
+depend only on ``(key, t)`` — each step derives its own key via
+``jax.random.fold_in(key, t)`` — so a chain may be generated in chunks of
+any size and the resulting stream is *bit-identical* to the monolithic
+(K, B, C) materialisation.  Long chains are therefore memory-bounded by
+the chunk size, not the chain length.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitcell, uniform_rng
+
+Array = jnp.ndarray
+
+
+def step_keys(key, start, n_steps: int) -> Array:
+    """Per-step keys for absolute steps [start, start + n_steps)."""
+    ts = jnp.asarray(start, jnp.int32) + jnp.arange(n_steps, dtype=jnp.int32)
+    return jax.vmap(lambda t: jax.random.fold_in(key, t))(ts)
+
+
+@runtime_checkable
+class RandomnessBackend(Protocol):
+    """Produces the (flips, u) operand stream for a span of MH steps."""
+
+    name: str
+
+    def chunk(
+        self, key, start, n_steps: int, shape: tuple, nbits: int
+    ) -> tuple[Array, Array]:
+        """Operands for steps [start, start+n_steps).
+
+        Returns (flips (n_steps, *shape) uint32, u (n_steps, *shape)
+        float32).  ``start`` may be a traced integer.
+        """
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class HostRandomness:
+    """Ideal software randomness — the baseline the CIM pipeline replaces."""
+
+    p_bfr: float = 0.45
+
+    name = "host"
+
+    def chunk(self, key, start, n_steps, shape, nbits):
+        def one(k):
+            k_flip, k_u = jax.random.split(k)
+            planes = jax.random.bernoulli(k_flip, self.p_bfr, (*shape, nbits))
+            weights = (
+                jnp.uint32(1) << jnp.arange(nbits, dtype=jnp.uint32)
+            ).astype(jnp.uint32)
+            flips = jnp.sum(
+                planes.astype(jnp.uint32) * weights, axis=-1
+            ).astype(jnp.uint32)
+            u = jax.random.uniform(k_u, shape, jnp.float32)
+            return flips, u
+
+        return jax.vmap(one)(step_keys(key, start, n_steps))
+
+
+@dataclasses.dataclass(frozen=True)
+class CIMRandomness:
+    """Paper-faithful randomness: pseudo-read bit-planes + MSXOR uniforms."""
+
+    p_bfr: float = 0.45            # proposal pseudo-read flip rate
+    rng_p_bfr: float = 0.45        # [0,1]-RNG sub-array raw-bit bias
+    rng_bit_width: int = 16        # packed debiased bits per uniform
+    rng_stages: int = 3            # MSXOR fold stages
+
+    name = "cim"
+
+    def chunk(self, key, start, n_steps, shape, nbits):
+        def one(k):
+            k_flip, k_u = jax.random.split(k)
+            flips = bitcell.raw_random_words(
+                k_flip, self.p_bfr, shape, nbits=nbits
+            )
+            u = uniform_rng.uniform(
+                k_u, shape, self.rng_p_bfr, self.rng_bit_width, self.rng_stages
+            )
+            return flips, u
+
+        return jax.vmap(one)(step_keys(key, start, n_steps))
+
+
+def make_randomness_backend(
+    name: str,
+    p_bfr: float,
+    rng_p_bfr: float | None = None,
+    rng_bit_width: int = 16,
+    rng_stages: int = 3,
+) -> RandomnessBackend:
+    if name == "host":
+        return HostRandomness(p_bfr=p_bfr)
+    if name == "cim":
+        return CIMRandomness(
+            p_bfr=p_bfr,
+            rng_p_bfr=p_bfr if rng_p_bfr is None else rng_p_bfr,
+            rng_bit_width=rng_bit_width,
+            rng_stages=rng_stages,
+        )
+    raise ValueError(f"unknown randomness backend {name!r} (host|cim)")

@@ -1,0 +1,103 @@
+"""Target axis of the sampler engine — what distribution the chain samples.
+
+Three target kinds (DESIGN.md §2):
+
+  * ``CallableTarget``  — an arbitrary log-prob function over k-bit words
+    (GMM/MGD grid targets, user densities).  Scan execution only: the
+    fused Pallas kernel needs the distribution materialised as a table.
+  * ``TableTarget``     — an explicit (B, V) table of unnormalised
+    log-probs (logits); B independent targets, each sampled by C chains
+    in lock-step.  Eligible for the fused Pallas kernel.
+  * ``TopKTarget``      — a TableTarget restricted to the top-k logits of
+    each row (beyond-paper latency knob); ``decode`` maps chain words
+    back to vocabulary ids.
+
+Targets are identity-hashed (no dataclass eq) so they can ride through
+``jax.jit`` static arguments exactly like the closures they replace.
+
+The table lookup here is bit-exact w.r.t. the Pallas kernel's in-VMEM
+lookup (clamp + mask-to--inf), which is what makes scan/pallas parity an
+exact array equality rather than a statistical statement.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+LogProbFn = Callable[[Array], Array]
+
+
+class CallableTarget:
+    """log p given as a function over integer words; any chain shape."""
+
+    table: Array | None = None
+
+    def __init__(self, log_prob_fn: LogProbFn, nbits: int):
+        if not 1 <= nbits <= 32:
+            raise ValueError(f"nbits must be in [1,32], got {nbits}")
+        self.log_prob_fn = log_prob_fn
+        self.nbits = nbits
+
+    def log_prob(self, words: Array) -> Array:
+        return self.log_prob_fn(words)
+
+    def decode(self, words: Array) -> Array:
+        return words
+
+
+class TableTarget:
+    """log p given as a (B, V) table; chain state has shape (B, C).
+
+    The lookup mirrors the fused kernel's semantics exactly: indices are
+    clamped for the gather, then out-of-support words (V is rarely a
+    power of two) get log p = -inf so they are always rejected.
+    """
+
+    def __init__(self, table: Array, nbits: int | None = None):
+        table = jnp.asarray(table, jnp.float32)
+        if table.ndim != 2:
+            raise ValueError(f"table must be (B, V), got {table.shape}")
+        self.table = table
+        self.vocab = table.shape[-1]
+        self.nbits = nbits or max(1, math.ceil(math.log2(self.vocab)))
+
+    def log_prob(self, words: Array) -> Array:
+        safe = jnp.minimum(words, jnp.uint32(self.vocab - 1)).astype(jnp.int32)
+        vals = jnp.take_along_axis(self.table, safe, axis=-1)
+        return jnp.where(words < self.vocab, vals, -jnp.inf)
+
+    def decode(self, words: Array) -> Array:
+        return words.astype(jnp.int32)
+
+
+class TopKTarget(TableTarget):
+    """TableTarget over each row's top-k logits; decode maps back to ids."""
+
+    def __init__(self, logits: Array, top_k: int, temperature: float = 1.0):
+        logits = jnp.asarray(logits, jnp.float32)
+        if not 0 < top_k <= logits.shape[-1]:
+            raise ValueError(
+                f"top_k must be in (0, V={logits.shape[-1]}], got {top_k}"
+            )
+        top_vals, top_idx = jax.lax.top_k(logits, top_k)
+        super().__init__(top_vals / temperature)
+        self.top_idx = top_idx
+
+    def decode(self, words: Array) -> Array:
+        return jnp.take_along_axis(
+            self.top_idx, words.astype(jnp.int32), axis=-1
+        )
+
+
+def logits_target(
+    logits: Array, temperature: float = 1.0, top_k: int = 0
+) -> TableTarget:
+    """The token-sampling target: full-vocab table or top-k restriction."""
+    if top_k > 0:
+        return TopKTarget(logits, top_k, temperature)
+    return TableTarget(jnp.asarray(logits, jnp.float32) / temperature)

@@ -4,7 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import given, settings, st  # hypothesis or skip-stubs
 
 from repro.core import metropolis, proposal, targets, uniform_rng
 from repro.core.macro import CIMMacro, MacroConfig
@@ -150,13 +151,22 @@ class TestMacro:
             jax.random.PRNGKey(9), gmm, codec, n_samples=2000
         )
         assert pts.shape == (2000, 1)
-        # 8-bit samples = 2 column groups; energy must match the §6.4 model
-        # evaluated at the realised acceptance rate
+        # 8-bit samples = 2 column groups; total energy must match the §6.4
+        # model evaluated at the realised acceptance rate, charged for EVERY
+        # chain step (burn-in included) but normalised by KEPT samples
         from repro.core import energy
 
-        expect_pj = energy.energy_per_sample_fj(stats.acceptance_rate, 8) / 1e3
-        assert stats.energy_per_sample_pj == pytest.approx(expect_pj, rel=1e-3)
-        assert stats.throughput_samples_per_s > 1e9  # 64 compartments
+        per_step_pj = energy.energy_per_sample_fj(stats.acceptance_rate, 8) / 1e3
+        assert stats.energy_pj == pytest.approx(
+            per_step_pj * stats.n_steps, rel=1e-3
+        )
+        assert stats.energy_per_sample_pj == pytest.approx(
+            stats.energy_pj / stats.n_samples, rel=1e-6
+        )
+        assert stats.throughput_samples_per_s == pytest.approx(
+            stats.n_samples / stats.modeled_time_s, rel=1e-6
+        )
+        assert stats.throughput_samples_per_s > 1e8  # 64 compartments
         assert 0.05 < stats.acceptance_rate < 0.95
 
     def test_macro_geometry_validation(self):

@@ -53,8 +53,14 @@ class TestLoopAwareFlops:
                 return x
             return f
 
-        f5 = _compile(make(5), (64, 64), (64, 64)).cost_analysis()["flops"]
-        f10 = _compile(make(10), (64, 64), (64, 64)).cost_analysis()["flops"]
+        def xla_flops(compiled):
+            ca = compiled.cost_analysis()
+            if isinstance(ca, list):  # older jax: one dict per device
+                ca = ca[0]
+            return ca["flops"]
+
+        f5 = xla_flops(_compile(make(5), (64, 64), (64, 64)))
+        f10 = xla_flops(_compile(make(10), (64, 64), (64, 64)))
         assert f5 == f10  # body-once: scan length invisible
 
     def test_plain_dot_flops(self):

@@ -8,7 +8,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import given, settings, st  # hypothesis or skip-stubs
 
 from repro.core import bitcell
 from repro.kernels.mh import ops as mh_ops

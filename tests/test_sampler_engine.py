@@ -1,0 +1,227 @@
+"""Unified sampler engine: backend parity, chunk invariance, macro metrics.
+
+The engine's three axes (target x randomness x execution, DESIGN.md §2)
+must compose without changing the chain:
+
+  * scan and pallas(interpret) executors consume identical randomness and
+    mirror each other op-for-op => bit-identical sample streams,
+  * chunked randomness streaming is defined per absolute step index =>
+    bit-identical to the monolithic materialisation,
+  * host and cim randomness differ only by the residual MSXOR debias
+    error and u quantisation => acceptance rates agree statistically.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import samplers
+from repro.core import metropolis, token_sampler
+from repro.core.macro import CIMMacro, MacroConfig
+from repro.core.targets import GaussianMixture, GridCodec
+
+
+def _table_and_init(b=3, v=100, chains=16, seed=0):
+    key = jax.random.PRNGKey(seed)
+    table = jax.random.normal(key, (b, v), jnp.float32)
+    init = jnp.broadcast_to(
+        jnp.argmax(table, -1).astype(jnp.uint32)[:, None], (b, chains)
+    )
+    return table, init
+
+
+def _engine(**kw):
+    return samplers.MHEngine(samplers.EngineConfig(**kw))
+
+
+class TestExecutionParity:
+    def test_scan_and_pallas_bit_identical(self):
+        """Same seed + same randomness backend => the two executors emit
+        the exact same sample stream and accept counts."""
+        table, init = _table_and_init()
+        target = samplers.TableTarget(table)
+        key = jax.random.PRNGKey(7)
+        r_scan = _engine(execution="scan", chunk_steps=16).run(
+            key, target, 48, init
+        )
+        r_pal = _engine(execution="pallas", chunk_steps=16).run(
+            key, target, 48, init
+        )
+        np.testing.assert_array_equal(
+            np.asarray(r_scan.samples), np.asarray(r_pal.samples)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(r_scan.accept_count), np.asarray(r_pal.accept_count)
+        )
+
+    @pytest.mark.parametrize("execution", ["scan", "pallas"])
+    def test_chunked_vs_monolithic_bit_identical(self, execution):
+        """Randomness for step t depends only on (key, t): any chunking of
+        the stream reproduces the monolithic operand block exactly."""
+        table, init = _table_and_init(b=2, v=64, chains=8, seed=1)
+        target = samplers.TableTarget(table)
+        key = jax.random.PRNGKey(11)
+        r_chunked = _engine(execution=execution, chunk_steps=7).run(
+            key, target, 50, init
+        )
+        r_mono = _engine(execution=execution, chunk_steps=1000).run(
+            key, target, 50, init
+        )
+        np.testing.assert_array_equal(
+            np.asarray(r_chunked.samples), np.asarray(r_mono.samples)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(r_chunked.accept_count), np.asarray(r_mono.accept_count)
+        )
+
+    def test_token_wrappers_scan_pallas_identical(self):
+        """The serving-facing wrapper inherits executor parity."""
+        key = jax.random.PRNGKey(5)
+        logits = jax.random.normal(key, (8, 50), jnp.float32) * 2
+        cfg_s = token_sampler.TokenSamplerConfig(
+            vocab_size=50, n_steps=48, execution="scan"
+        )
+        cfg_p = token_sampler.TokenSamplerConfig(
+            vocab_size=50, n_steps=48, execution="pallas"
+        )
+        r_s = token_sampler.sample_tokens(key, logits, cfg_s)
+        r_p = token_sampler.sample_tokens(key, logits, cfg_p)
+        np.testing.assert_array_equal(
+            np.asarray(r_s.tokens), np.asarray(r_p.tokens)
+        )
+        assert float(r_s.acceptance_rate) == float(r_p.acceptance_rate)
+
+
+class TestRandomnessBackends:
+    def test_host_vs_cim_acceptance_close(self):
+        """host (ideal jax.random) and cim (pseudo-read + MSXOR) implement
+        the same proposal/accept distribution up to the debias residual."""
+        table, init = _table_and_init(b=4, v=64, chains=64, seed=2)
+        target = samplers.TableTarget(table)
+        key = jax.random.PRNGKey(3)
+        n_steps = 400
+        acc = {}
+        for name in ("host", "cim"):
+            res = _engine(execution="scan", randomness=name).run(
+                key, target, n_steps, init
+            )
+            acc[name] = float(res.acceptance_rate)
+        assert 0.0 < acc["cim"] < 1.0
+        # ~100k accept trials per backend; 3-sigma ~ 0.5%
+        assert acc["host"] == pytest.approx(acc["cim"], abs=0.02)
+
+    def test_cim_distribution_matches_softmax(self):
+        """End-to-end: cim randomness + scan executor converge to the
+        table's softmax (the paper's core claim, engine edition)."""
+        key = jax.random.PRNGKey(7)
+        logits = jnp.asarray(
+            np.random.default_rng(0).normal(size=(1, 32)), jnp.float32
+        )
+        target = samplers.TableTarget(logits)
+        init = jnp.broadcast_to(
+            jnp.argmax(logits, -1).astype(jnp.uint32)[:, None], (1, 256)
+        )
+        res = _engine(execution="scan").run(key, target, 400, init)
+        kept = np.asarray(res.samples[200:]).reshape(-1)
+        emp = np.bincount(kept, minlength=32) / kept.size
+        ref = np.asarray(jax.nn.softmax(logits[0]))
+        tv = 0.5 * np.abs(emp - ref).sum()
+        assert tv < 0.05, f"TV {tv}"
+
+    def test_backend_factory_rejects_unknown(self):
+        with pytest.raises(ValueError):
+            samplers.make_randomness_backend("quantum", p_bfr=0.45)
+
+
+class TestDispatch:
+    def test_auto_on_cpu_is_scan(self):
+        target = samplers.TableTarget(jnp.zeros((1, 16), jnp.float32))
+        resolved = samplers.resolve_execution("auto", target)
+        expect = "pallas" if jax.default_backend() == "tpu" else "scan"
+        assert resolved == expect
+
+    def test_explicit_override_wins(self):
+        target = samplers.TableTarget(jnp.zeros((1, 16), jnp.float32))
+        assert samplers.resolve_execution("pallas", target) == "pallas"
+        assert samplers.resolve_execution("scan", target) == "scan"
+
+    def test_pallas_requires_table_target(self):
+        target = samplers.CallableTarget(
+            lambda w: jnp.zeros(w.shape, jnp.float32), nbits=4
+        )
+        with pytest.raises(ValueError):
+            samplers.resolve_execution("pallas", target)
+
+    def test_engine_config_validation(self):
+        with pytest.raises(ValueError):
+            samplers.EngineConfig(execution="vulkan")
+        with pytest.raises(ValueError):
+            samplers.EngineConfig(randomness="dice")
+        with pytest.raises(ValueError):
+            samplers.EngineConfig(chunk_steps=0)
+
+
+class TestWrapperEquivalence:
+    def test_metropolis_wrapper_routes_through_engine(self):
+        """run_chain == engine.run + burn-in/thin slicing, bit for bit."""
+        logp_table = jnp.asarray(
+            np.random.default_rng(4).normal(size=32), jnp.float32
+        )
+
+        def log_prob(words):
+            safe = jnp.clip(words.astype(jnp.int32), 0, 31)
+            return jnp.where(words < 32, logp_table[safe], -jnp.inf)
+
+        cfg = metropolis.MHConfig(nbits=5, burn_in=20, rng_bit_width=16)
+        key = jax.random.PRNGKey(13)
+        init = jnp.zeros((8,), jnp.uint32)
+        res = metropolis.run_chain(
+            key, log_prob, cfg, n_samples=30, chain_shape=(8,), init_words=init
+        )
+        engine = samplers.MHEngine(cfg.engine_config())
+        target = samplers.CallableTarget(log_prob, cfg.nbits)
+        raw = engine.run(key, target, 50, init)
+        np.testing.assert_array_equal(
+            np.asarray(res.samples), np.asarray(raw.samples[20:])
+        )
+        np.testing.assert_array_equal(
+            np.asarray(res.final.accept_count), np.asarray(raw.accept_count)
+        )
+
+
+class TestMacroMetrics:
+    def test_energy_and_throughput_normalised_by_kept_samples(self):
+        """Regression for the Fig. 16 metric definitions: pJ/sample and
+        samples/s divide by KEPT samples, not total chain steps (which
+        silently deflated pJ/sample and inflated throughput by the
+        burn-in + thinning factor)."""
+        from repro.core import energy
+
+        macro = CIMMacro(MacroConfig(nbits=8, burn_in=100, thin=2))
+        gmm = GaussianMixture.paper_gmm()
+        codec = GridCodec(nbits=8, dim=1, lo=(-10.0,), hi=(10.0,))
+        pts, stats = macro.sample_points(
+            jax.random.PRNGKey(1), gmm, codec, n_samples=640
+        )
+        assert stats.n_samples == 640
+        # ledger still charges every step...
+        per_step_pj = (
+            energy.energy_per_sample_fj(stats.acceptance_rate, 8) / 1e3
+        )
+        assert stats.energy_pj == pytest.approx(
+            per_step_pj * stats.n_steps, rel=1e-3
+        )
+        # ...but the user-facing metrics are per kept sample
+        assert stats.energy_per_sample_pj == pytest.approx(
+            stats.energy_pj / stats.n_samples, rel=1e-6
+        )
+        assert stats.throughput_samples_per_s == pytest.approx(
+            stats.n_samples / stats.modeled_time_s, rel=1e-6
+        )
+        # burn-in + thinning means each kept sample costs MORE than a step
+        assert stats.energy_per_sample_pj > per_step_pj
+        assert (
+            stats.throughput_samples_per_s
+            < stats.n_steps / stats.modeled_time_s
+        )
