@@ -1,7 +1,11 @@
-"""Benchmark harness: one module per paper table/figure.
+"""Benchmark harness: one module per paper table/figure or subsystem.
 
-Each module exposes ``run() -> list[dict]``; this driver executes them all
-and prints per-table key=value lines (machine-greppable, human-readable).
+Each module exposes ``run() -> list[dict]``; this driver executes them
+all, prints per-table key=value lines (machine-greppable,
+human-readable), and aggregates every table into ``BENCH_workloads.json``
+at the repo root so the perf trajectory stays machine-readable across
+PRs (rows are merged table-by-table, so a filtered run refreshes only
+the tables it executed).
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run fig17      # name filter
@@ -9,6 +13,8 @@ and prints per-table key=value lines (machine-greppable, human-readable).
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
@@ -23,12 +29,32 @@ MODULES = [
     ("sampler_quality", "benchmarks.bench_sampler_quality"),
     ("token_sampler", "benchmarks.bench_token_sampler"),
     ("gray_ablation", "benchmarks.bench_gray_ablation"),
+    ("workloads", "benchmarks.bench_workloads"),
 ]
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+AGGREGATE_PATH = os.path.join(_REPO_ROOT, "BENCH_workloads.json")
+
+
+def write_aggregate(tables: dict, path: str = AGGREGATE_PATH) -> None:
+    """Merge the tables that ran into the cross-PR aggregate file."""
+    merged = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                merged = json.load(f).get("tables", {})
+        except (json.JSONDecodeError, OSError):
+            merged = {}  # corrupt/legacy file: rebuild from this run
+    merged.update(tables)
+    with open(path, "w") as f:
+        json.dump({"format": 1, "tables": merged}, f, indent=2, sort_keys=True)
+        f.write("\n")
 
 
 def main() -> None:
     flt = sys.argv[1] if len(sys.argv) > 1 else ""
     failures = []
+    tables = {}
     for name, modpath in MODULES:
         if flt and flt not in name:
             continue
@@ -40,11 +66,15 @@ def main() -> None:
             for row in rows:
                 print("  " + "  ".join(f"{k}={v}" for k, v in row.items()))
             print(f"  [{len(rows)} rows, {time.time() - t0:.1f}s]")
+            tables[name] = rows
         except Exception as e:  # keep the harness going; report at the end
             import traceback
 
             traceback.print_exc()
             failures.append((name, repr(e)))
+    if tables:
+        write_aggregate(tables)
+        print(f"\naggregated {len(tables)} tables -> {AGGREGATE_PATH}")
     if failures:
         print("\nFAILED:", failures)
         raise SystemExit(1)

@@ -1,0 +1,12 @@
+# Chain diagnostics (DESIGN.md §Workloads): acceptance/flip rate comes
+# from the engine itself; this package judges the *samples* — integrated
+# autocorrelation time, effective sample size, and split-R-hat over a
+# scalar statistic of the chain.
+
+from repro.diagnostics.chain_stats import (  # noqa: F401
+    autocorrelation,
+    effective_sample_size,
+    integrated_autocorr_time,
+    split_rhat,
+    summarize,
+)

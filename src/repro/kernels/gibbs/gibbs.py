@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: fused checkerboard Gibbs sweep over a 2-D MRF.
+
+The K-half-sweep Gibbs loop runs inside one kernel invocation with the
+whole lattice resident in VREG/VMEM — the Gibbs analogue of the fused MH
+chain (kernels/mh/mh.py).  Per half-sweep:
+
+  * conditional logit from the model's ``logit_fn`` (e.g. the Ising
+    4-neighbour coupling, periodic boundary via rolls) — the *same*
+    function the scan executor calls, traced into the kernel as a static
+    closure, so scan/pallas share one conditional implementation,
+  * conditional flip  = u < sigmoid(logit)  (accurate [0,1] RNG operand —
+    the same uniform stream the MH accept test consumes),
+  * only the active checkerboard colour is rewritten (the two-colour
+    sweep keeps every update's neighbourhood fixed, so all sites of one
+    colour flip in parallel exactly as the macro's compartments do).
+
+Random inputs are kernel *operands* on CPU/interpret, exactly like the MH
+kernel; the in-kernel hw-PRNG variant remains TPU-only future work.
+
+Grid: (B,) — B independent lattices, one (H, W) block each.  W rides the
+128-wide lane axis; a periodic lattice cannot be zero-padded, so compiled
+TPU execution wants W as a lane multiple while interpret mode (CPU) takes
+any shape.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gibbs_kernel(
+    init_ref,     # (1, H, W) uint32 {0,1} spins
+    u_ref,        # (K, 1, H, W) float32
+    samples_ref,  # (K, 1, H, W) uint32  out
+    flips_ref,    # (1, H, W) int32      out
+    *,
+    logit_fn,
+    n_steps: int,
+    parity0: int,
+):
+    state0 = init_ref[0]
+    h, w = state0.shape
+    row = jax.lax.broadcasted_iota(jnp.int32, (h, w), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (h, w), 1)
+    checker = (row + col) % 2
+
+    def body(k, carry):
+        state, nflips = carry
+        parity = (parity0 + k) % 2
+        new = (u_ref[k, 0] < jax.nn.sigmoid(logit_fn(state))).astype(
+            jnp.uint32
+        )
+        nxt = jnp.where(checker == parity, new, state)
+        samples_ref[k, 0] = nxt
+        return nxt, nflips + (nxt != state).astype(jnp.int32)
+
+    _, nflips = jax.lax.fori_loop(
+        0, n_steps, body, (state0, jnp.zeros_like(state0, jnp.int32))
+    )
+    flips_ref[0] = nflips
+
+
+@functools.partial(
+    jax.jit, static_argnames=("logit_fn", "parity0", "interpret")
+)
+def gibbs_chain_pallas(
+    init: jnp.ndarray,  # (B, H, W) uint32 {0,1} spins
+    u: jnp.ndarray,     # (K, B, H, W) float32
+    logit_fn,           # (H, W) state -> (H, W) conditional logit of s=1
+    parity0: int = 0,
+    interpret: bool = True,
+):
+    """Fused K-half-sweep checkerboard Gibbs over B independent lattices.
+
+    ``logit_fn`` must be hashable (it rides a jit static argument) — a
+    bound method of a frozen model dataclass qualifies.
+    """
+    b, h, w = init.shape
+    k_steps = u.shape[0]
+    if u.shape != (k_steps, b, h, w):
+        raise ValueError(
+            f"shape mismatch: init={init.shape} u={u.shape}"
+        )
+    kernel = functools.partial(
+        _gibbs_kernel,
+        logit_fn=logit_fn,
+        n_steps=k_steps,
+        parity0=parity0,
+    )
+    samples, flips = pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((k_steps, 1, h, w), lambda i: (0, i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k_steps, 1, h, w), lambda i: (0, i, 0, 0)),
+            pl.BlockSpec((1, h, w), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k_steps, b, h, w), jnp.uint32),
+            jax.ShapeDtypeStruct((b, h, w), jnp.int32),
+        ],
+        interpret=interpret,
+    )(init.astype(jnp.uint32), u)
+    return samples, flips

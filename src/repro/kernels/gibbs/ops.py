@@ -1,0 +1,39 @@
+"""Public jit'd wrapper for the fused checkerboard Gibbs kernel.
+
+``gibbs_sweep`` is the engine-facing entry (randomness as operands),
+mirroring ``kernels.mh.ops.mh_sample``.  A periodic lattice cannot be
+zero-padded the way the MH chain axis can (padding would change every
+edge site's neighbourhood), so no padding happens here: compiled TPU
+execution wants W as a multiple of the 128-wide lane, while interpret
+mode (CPU) takes any lattice shape.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.gibbs.gibbs import gibbs_chain_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def gibbs_sweep(init, u, logit_fn, parity0: int = 0):
+    """Run K fused checkerboard half-sweeps from ``init`` (B, H, W).
+
+    ``logit_fn`` is the model's per-site conditional logit (e.g.
+    ``IsingModel.conditional_logit``) — the same function the scan
+    executor steps, traced into the kernel.  ``u`` is the (K, B, H, W)
+    accurate-[0,1] uniform stream (one draw per site per half-sweep —
+    inactive-colour draws are discarded, matching the scan executor so
+    the streams stay aligned).  Returns (samples (K, B, H, W) uint32,
+    flip_count (B, H, W) int32).
+    """
+    return gibbs_chain_pallas(
+        init,
+        u,
+        logit_fn,
+        parity0=int(parity0),
+        interpret=not _on_tpu(),
+    )

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the fused checkerboard Gibbs kernel.
+
+Exercises the same ``logit_fn`` the kernel traces, so a kernel-vs-ref
+mismatch isolates pallas_call plumbing (grid, block specs, fori_loop
+refs) rather than conditional math.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gibbs_chain_ref(
+    init: jnp.ndarray,  # (B, H, W) uint32 {0,1} spins
+    u: jnp.ndarray,     # (K, B, H, W) float32 uniforms
+    logit_fn,           # (..., H, W) state -> (..., H, W) conditional logit
+    parity0: int = 0,
+):
+    """Reference checkerboard Gibbs semantics, bit-exact w.r.t. the kernel.
+
+    Returns (samples (K, B, H, W) uint32, flip_count (B, H, W) int32).
+    """
+    h, w = init.shape[-2:]
+    row = jax.lax.broadcasted_iota(jnp.int32, (h, w), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (h, w), 1)
+    checker = (row + col) % 2
+    init = init.astype(jnp.uint32)
+
+    def body(carry, xs):
+        state, nflips = carry
+        u_t, t = xs
+        parity = (parity0 + t) % 2
+        new = (u_t < jax.nn.sigmoid(logit_fn(state))).astype(jnp.uint32)
+        nxt = jnp.where(checker == parity, new, state)
+        return (nxt, nflips + (nxt != state).astype(jnp.int32)), nxt
+
+    steps = jnp.arange(u.shape[0], dtype=jnp.int32)
+    (_, nflips), samples = jax.lax.scan(
+        body, (init, jnp.zeros(init.shape, jnp.int32)), (u, steps)
+    )
+    return samples, nflips

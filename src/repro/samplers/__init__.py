@@ -1,8 +1,10 @@
-# The unified MH sampler engine (DESIGN.md §2): one Metropolis–Hastings
-# datapath, pluggable on three orthogonal axes —
+# The unified sampler engine (DESIGN.md §2): one chain datapath,
+# pluggable on four orthogonal axes —
 #
 #   targets      what the chain samples (callable log-prob / (B,V) table /
-#                top-k-restricted logits)
+#                top-k-restricted logits / conditional lattice models)
+#   update rule  how a step rewrites the state (MH accept test vs Gibbs
+#                conditional flip)
 #   randomness   where the random operands come from (host jax.random vs
 #                the CIM pseudo-read + MSXOR pipeline), streamed in chunks
 #   engine       how steps execute (pure-JAX lax.scan vs the fused Pallas
@@ -15,6 +17,7 @@ from repro.samplers.engine import (  # noqa: F401
     EngineConfig,
     EngineResult,
     MHEngine,
+    SamplerEngine,
     resolve_execution,
     run_engine,
 )

@@ -1,23 +1,32 @@
-"""The unified Metropolis–Hastings engine — one MH datapath, three axes.
+"""The unified sampler engine — one chain datapath, four axes.
 
-Every MCMC workload in this repo is the same four-phase step (paper
-Fig. 14): pseudo-read proposal, accurate-[0,1] accept threshold, accept
-test on the log-prob ratio, in-memory copy.  ``MHEngine`` implements that
-step exactly once and exposes three orthogonal, pluggable axes
-(DESIGN.md §2):
+Every MCMC workload in this repo is a per-step state update driven by
+the macro's randomness (paper Fig. 14): a random operand stream feeds an
+update rule, and the chain state is rewritten in place.  ``MHEngine``
+implements that loop exactly once and exposes four orthogonal, pluggable
+axes (DESIGN.md §2):
 
   * **target**      — ``CallableTarget`` / ``TableTarget`` / ``TopKTarget``
+                      (MH), or a conditional lattice model such as
+                      ``workloads.ising.IsingModel`` (Gibbs)
+  * **update rule** — ``mh`` (XOR-propose + accept test on the log-prob
+                      ratio) vs ``gibbs`` (checkerboard conditional flip:
+                      u < sigmoid(conditional logit), no reject)
   * **randomness**  — ``host`` (plain jax.random) vs ``cim`` (pseudo-read
-                      bit-planes + MSXOR-debiased uniforms)
+                      bit-planes + MSXOR-debiased uniforms); both rules
+                      consume the same accurate-[0,1] uniform stream, so
+                      host-vs-cim comparisons carry across rules
   * **execution**   — ``scan`` (pure-JAX ``lax.scan``) vs ``pallas`` (the
                       fused VMEM-resident kernel), with ``auto`` picking
                       by ``jax.default_backend()``
 
-The two executors consume identical randomness operands and mirror each
-other op-for-op, so with the same key they produce bit-identical sample
-streams (asserted in tests/test_sampler_engine.py).  Randomness streams
-in chunks of ``chunk_steps`` — operands for step ``t`` depend only on
-``(key, t)`` — so chains of any length run in O(chunk) operand memory.
+For each update rule, the two executors consume identical randomness
+operands and mirror each other op-for-op, so with the same key they
+produce bit-identical sample streams (asserted in
+tests/test_sampler_engine.py and tests/test_workloads.py).  Randomness
+streams in chunks of ``chunk_steps`` — operands for step ``t`` depend
+only on ``(key, t)`` — so chains of any length run in O(chunk) operand
+memory.
 """
 
 from __future__ import annotations
@@ -43,17 +52,19 @@ from repro.samplers.targets import (
 Array = jnp.ndarray
 
 _EXECUTION_CHOICES = ("auto", "scan", "pallas")
+_UPDATE_CHOICES = ("mh", "gibbs")
 
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    """Static configuration of the engine's randomness/execution axes."""
+    """Static configuration of the engine's update/randomness/execution axes."""
 
     p_bfr: float = 0.45              # proposal bit-flip rate (pseudo-read)
     randomness: str = "cim"          # host | cim
     rng_p_bfr: float | None = None   # [0,1]-RNG raw-bit bias (default p_bfr)
     rng_bit_width: int = 16          # u precision (cim backend)
     rng_stages: int = 3              # MSXOR stages (cim backend)
+    update: str = "mh"               # mh | gibbs (DESIGN.md §2 update rule)
     execution: str = "auto"          # auto | scan | pallas
     chunk_steps: int = 64            # randomness streaming granularity
     block_c: int = 256               # pallas chain-axis block size
@@ -63,6 +74,10 @@ class EngineConfig:
             raise ValueError(
                 f"execution must be one of {_EXECUTION_CHOICES}, "
                 f"got {self.execution!r}"
+            )
+        if self.update not in _UPDATE_CHOICES:
+            raise ValueError(
+                f"update must be one of {_UPDATE_CHOICES}, got {self.update!r}"
             )
         if self.randomness not in ("host", "cim"):
             raise ValueError(
@@ -90,9 +105,27 @@ class EngineResult(NamedTuple):
     n_steps: jnp.int32
 
 
-def resolve_execution(execution: str, target) -> str:
+def resolve_execution(execution: str, target, update: str = "mh") -> str:
     """Backend dispatch rule (DESIGN.md §2): explicit override wins;
-    ``auto`` = fused kernel on TPU for table targets, scan elsewhere."""
+    ``auto`` = fused kernel on TPU for fusable targets, scan elsewhere.
+
+    What makes a target fusable depends on the update rule: ``mh`` needs
+    the distribution materialised as a table (held in VMEM); ``gibbs``
+    needs a lattice model the checkerboard kernel knows how to sweep
+    (``supports_fused_gibbs``)."""
+    if update == "gibbs":
+        if execution == "pallas":
+            if not getattr(target, "supports_fused_gibbs", False):
+                raise ValueError(
+                    "pallas Gibbs execution needs a lattice model with a "
+                    "fused checkerboard kernel (supports_fused_gibbs); "
+                    "use execution='scan'"
+                )
+            return "pallas"
+        # auto never fuses Gibbs: eligibility depends on the lattice shape
+        # (periodic boundaries cannot pad to the 128-lane, DESIGN.md §3),
+        # which dispatch cannot see.  Explicit pallas opts in.
+        return "scan"
     if execution == "pallas":
         if target.table is None:
             raise ValueError(
@@ -190,8 +223,89 @@ def _run_pallas(key, target, backend, nbits, n_steps, chunk, block_c, init_words
     return samples, acc, state, logp
 
 
+def _gibbs_step(target, state, acc, u, parity):
+    """THE Gibbs half-sweep — the only scan-side implementation in the repo.
+
+    Mirrors the Pallas kernel body (kernels/gibbs/gibbs.py:_gibbs_kernel)
+    op-for-op: conditional logit from the current neighbours, draw the
+    site's new value as u < sigmoid(logit), write it on the active
+    checkerboard colour only.  There is no reject — ``acc`` counts sites
+    whose value actually changed (the flip count)."""
+    logit = target.conditional_logit(state)
+    new = (u < jax.nn.sigmoid(logit)).astype(jnp.uint32)
+    active = target.update_mask(state.shape, parity)
+    nxt = jnp.where(active, new, state)
+    return nxt, acc + (nxt != state).astype(jnp.int32)
+
+
+def _gibbs_span(target, carry, u, idx):
+    """Scan the Gibbs half-sweep over one chunk; ``idx`` carries the
+    absolute step numbers so the checkerboard parity survives chunking."""
+
+    def body(c, xs):
+        state, acc = c
+        u_t, t = xs
+        state, acc = _gibbs_step(target, state, acc, u_t, t % 2)
+        return (state, acc), state
+
+    return jax.lax.scan(body, carry, (u, idx))
+
+
+def _run_scan_gibbs(key, target, backend, n_steps, chunk, init_words):
+    shape = init_words.shape
+    carry = (init_words.astype(jnp.uint32), jnp.zeros(shape, jnp.int32))
+    chunk = max(1, min(chunk, n_steps))
+    n_full, rem = divmod(n_steps, chunk)
+    pieces = []
+    if n_full:
+
+        def outer(c, start):
+            _, u = backend.chunk(key, start, chunk, shape, 1)
+            idx = start + jnp.arange(chunk, dtype=jnp.int32)
+            return _gibbs_span(target, c, u, idx)
+
+        starts = jnp.arange(n_full, dtype=jnp.int32) * chunk
+        carry, stacked = jax.lax.scan(outer, carry, starts)
+        pieces.append(stacked.reshape(n_full * chunk, *shape))
+    if rem:
+        start = n_full * chunk
+        _, u = backend.chunk(key, start, rem, shape, 1)
+        idx = start + jnp.arange(rem, dtype=jnp.int32)
+        carry, tail = _gibbs_span(target, carry, u, idx)
+        pieces.append(tail)
+    samples = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, 0)
+    state, acc = carry
+    return samples, acc, state
+
+
+def _run_pallas_gibbs(key, target, backend, n_steps, chunk, init_words):
+    from repro.kernels.gibbs import ops as gibbs_ops  # avoid import cycle
+
+    if init_words.ndim != 3:
+        raise ValueError(
+            f"pallas Gibbs expects (B, H, W) lattice state, got "
+            f"{init_words.shape}"
+        )
+    state = init_words.astype(jnp.uint32)
+    acc = jnp.zeros(state.shape, jnp.int32)
+    pieces = []
+    chunk = max(1, min(chunk, n_steps))
+    for start in range(0, n_steps, chunk):
+        n = min(chunk, n_steps - start)
+        _, u = backend.chunk(key, start, n, state.shape, 1)
+        samples, flips = gibbs_ops.gibbs_sweep(
+            state, u, target.conditional_logit, parity0=start % 2
+        )
+        state = samples[-1]
+        acc = acc + flips
+        pieces.append(samples)
+    samples = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, 0)
+    return samples, acc, state
+
+
 class MHEngine:
-    """One MH engine, pluggable on all three axes.
+    """One sampler engine, pluggable on all four axes (the name predates
+    the ``gibbs`` update rule; ``SamplerEngine`` aliases it).
 
     Methods are traceable (no internal ``jax.jit``) so thin wrappers can
     jit at whatever boundary fits their API; ``run_engine`` below is the
@@ -207,13 +321,21 @@ class MHEngine:
         return self._backend
 
     def run(self, key, target, n_steps: int, init_words) -> EngineResult:
-        """Run ``n_steps`` of MH from ``init_words``; collect every state.
+        """Run ``n_steps`` of the configured update rule from
+        ``init_words``; collect every state.
 
-        ``init_words``: (B, C) for table targets (B independent targets x
-        C lock-step chains), any shape for callable targets.
+        ``mh``: ``init_words`` is (B, C) for table targets (B independent
+        targets x C lock-step chains), any shape for callable targets.
+        ``gibbs``: ``init_words`` is the lattice state (..., H, W) of
+        {0, 1} spin words (strictly (B, H, W) under pallas execution);
+        each step is one checkerboard half-sweep, ``accept_count`` is the
+        per-site flip count, and ``final_logp`` is the per-site
+        conditional log-prob (pseudo-likelihood) of the final state.
         """
         if n_steps < 1:
             raise ValueError(f"n_steps must be >= 1, got {n_steps}")
+        if self.config.update == "gibbs":
+            return self._run_gibbs(key, target, n_steps, init_words)
         execution = resolve_execution(self.config.execution, target)
         args = (key, target, self._backend, target.nbits, n_steps,
                 self.config.chunk_steps)
@@ -223,6 +345,33 @@ class MHEngine:
             samples, acc, words, logp = _run_pallas(
                 *args, self.config.block_c, init_words
             )
+        total = jnp.float32(n_steps) * jnp.float32(max(1, init_words.size))
+        return EngineResult(
+            samples=samples,
+            accept_count=acc,
+            acceptance_rate=jnp.sum(acc).astype(jnp.float32) / total,
+            final_words=words,
+            final_logp=logp,
+            n_steps=jnp.int32(n_steps),
+        )
+
+    def _run_gibbs(self, key, target, n_steps: int, init_words) -> EngineResult:
+        if not hasattr(target, "conditional_logit"):
+            raise ValueError(
+                "gibbs update needs a conditional target exposing "
+                "conditional_logit/update_mask (e.g. workloads.ising."
+                f"IsingModel); got {type(target).__name__}"
+            )
+        execution = resolve_execution(self.config.execution, target, "gibbs")
+        args = (key, target, self._backend, n_steps, self.config.chunk_steps)
+        if execution == "scan":
+            samples, acc, words = _run_scan_gibbs(*args, init_words)
+        else:
+            samples, acc, words = _run_pallas_gibbs(*args, init_words)
+        logit = target.conditional_logit(words)
+        logp = jnp.where(
+            words == 1, jax.nn.log_sigmoid(logit), jax.nn.log_sigmoid(-logit)
+        ).astype(jnp.float32)
         total = jnp.float32(n_steps) * jnp.float32(max(1, init_words.size))
         return EngineResult(
             samples=samples,
@@ -258,6 +407,9 @@ class MHEngine:
         result = self.run(key, target, n_steps, init[:, None])
         tokens = target.decode(result.final_words)[:, 0].astype(jnp.int32)
         return tokens, result
+
+
+SamplerEngine = MHEngine  # the engine outgrew its MH-only name in PR 2
 
 
 @partial(jax.jit, static_argnames=("engine", "target", "n_steps"))

@@ -1,0 +1,71 @@
+"""The probabilistic-model zoo (DESIGN.md §Workloads).
+
+Every workload is the same three-piece contract riding the unified
+sampler engine:
+
+  * a **target** (log-prob table/callable for ``mh``, conditional lattice
+    model for ``gibbs``),
+  * an **update rule** + engine config (randomness/execution axes flow
+    straight through, so every workload gets host-vs-cim and scan-vs-
+    pallas for free),
+  * a **scalar statistic** of the sample stream that
+    ``repro.diagnostics`` judges (tau / ESS / split-R-hat).
+
+``build(name, key, ...)`` assembles a ``WorkloadRun``; the registry is
+what ``python -m repro.launch.sample`` and ``benchmarks.bench_workloads``
+iterate over.  Adding a workload = one module exposing ``build`` plus a
+registry line.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro import diagnostics, samplers
+from repro.workloads import gmm, ising
+
+
+@dataclasses.dataclass
+class WorkloadRun:
+    """One assembled workload: engine + target + chain layout + statistic."""
+
+    name: str
+    engine: samplers.MHEngine
+    target: object
+    init_words: object
+    n_steps: int
+    burn_in: int
+    series_fn: Callable          # samples (K, *chain) -> (K, n_chains) stat
+    meta: dict
+
+    def run(self, key) -> samplers.EngineResult:
+        return self.engine.run(key, self.target, self.n_steps, self.init_words)
+
+    def diagnostics(self, result: samplers.EngineResult) -> dict:
+        """Chain diagnostics over the post-burn-in scalar statistic."""
+        series = np.asarray(self.series_fn(result.samples))
+        series = series.reshape(series.shape[0], -1)
+        return diagnostics.summarize(
+            series[self.burn_in:],
+            acceptance_rate=float(result.acceptance_rate),
+        )
+
+
+WORKLOADS = {
+    "ising": ising.build,
+    "gmm": gmm.build,
+}
+
+
+def build(name: str, key, **kwargs) -> WorkloadRun:
+    """Assemble a registered workload by name."""
+    try:
+        builder = WORKLOADS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown workload {name!r} (have {sorted(WORKLOADS)})"
+        ) from None
+    return builder(key, **kwargs)

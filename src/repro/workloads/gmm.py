@@ -1,0 +1,117 @@
+"""Gaussian-mixture posterior workload — MC²RAM's in-SRAM benchmark.
+
+The Bayesian-inference workload MC²RAM (PAPERS.md) runs directly in
+SRAM: draw posterior samples from a Gaussian mixture by MH over the
+discretized sample space.  Here the mixture is the paper's Fig. 17(a)
+4-component GMM, the sample space is a ``GridCodec`` lattice of 2^nbits
+cells, and the chain is the unified engine's ``mh`` update rule.
+
+The canonical target is a ``CallableTarget`` over the discretized space
+(``make_callable_target``) — density evaluated at the decoded grid point
+per step, any nbits.  ``build`` materialises it into a ``TableTarget``
+(one density evaluation per grid cell, done once) so the same workload
+runs under both executors: the table rows are *by construction* the
+callable's values, and TableTarget lookup is bit-exact w.r.t. the fused
+kernel's VMEM lookup, so scan/pallas parity carries over from PR 1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import samplers
+from repro.core.targets import GaussianMixture, GridCodec, reference_grid_probs
+
+Array = jnp.ndarray
+
+
+def default_model() -> tuple[GaussianMixture, GridCodec]:
+    """The paper's Fig. 17(a) mixture on the Fig. 17 grid box."""
+    return (
+        GaussianMixture.paper_gmm(),
+        GridCodec(nbits=8, dim=1, lo=(-10.0,), hi=(10.0,)),
+    )
+
+
+def make_callable_target(
+    gmm: GaussianMixture, codec: GridCodec
+) -> samplers.CallableTarget:
+    """The workload's defining form: log p over words = log density at the
+    decoded grid point (scan execution, any nbits)."""
+
+    def log_prob(words: Array) -> Array:
+        # decode gives (..., dim); the mixture's log_prob consumes dim
+        return gmm.log_prob(codec.decode(words))
+
+    return samplers.CallableTarget(log_prob, codec.nbits)
+
+
+def make_table_target(
+    gmm: GaussianMixture, codec: GridCodec
+) -> samplers.TableTarget:
+    """The callable target materialised cell-by-cell into a (1, 2^nbits)
+    table — the fused-kernel-eligible form of the same distribution."""
+    words = jnp.arange(1 << codec.nbits, dtype=jnp.uint32)
+    table = gmm.log_prob(codec.decode(words))[None, :]
+    return samplers.TableTarget(table, nbits=codec.nbits)
+
+
+def build(
+    key,
+    randomness: str = "cim",
+    backend: str = "auto",
+    smoke: bool = False,
+    nbits: int | None = None,
+    chains: int | None = None,
+    n_steps: int | None = None,
+    chunk_steps: int = 32,
+):
+    """Assemble the GMM posterior workload (see workloads.WorkloadRun)."""
+    from repro import workloads  # deferred: workloads imports this module
+
+    nbits = nbits or 8
+    chains = chains or (16 if smoke else 64)
+    n_steps = n_steps or (96 if smoke else 2048)
+    gmm = GaussianMixture.paper_gmm()
+    codec = GridCodec(nbits=nbits, dim=1, lo=(-10.0,), hi=(10.0,))
+    target = make_table_target(gmm, codec)
+    engine = samplers.MHEngine(
+        samplers.EngineConfig(
+            update="mh",
+            randomness=randomness,
+            execution=backend,
+            chunk_steps=chunk_steps,
+        )
+    )
+    init = jax.random.randint(
+        key, (1, chains), 0, 1 << nbits, dtype=jnp.int32
+    ).astype(jnp.uint32)
+
+    def series_fn(samples: Array) -> Array:
+        # (K, 1, C) words -> (K, C) decoded x coordinates
+        x = codec.decode(samples)[..., 0]
+        return x.reshape(x.shape[0], -1)
+
+    return workloads.WorkloadRun(
+        name="gmm",
+        engine=engine,
+        target=target,
+        init_words=init,
+        n_steps=n_steps,
+        burn_in=n_steps // 4,
+        series_fn=series_fn,
+        meta={
+            "nbits": nbits,
+            "chains": chains,
+            "components": len(gmm.weights),
+            "statistic": "x",
+        },
+    )
+
+
+def reference_probs(nbits: int = 8):
+    """Exact normalised cell probabilities (for TV-distance checks)."""
+    gmm = GaussianMixture.paper_gmm()
+    codec = GridCodec(nbits=nbits, dim=1, lo=(-10.0,), hi=(10.0,))
+    return reference_grid_probs(gmm, codec)

@@ -1,0 +1,95 @@
+"""Chain diagnostics: the estimators must rank chains correctly.
+
+Calibration contract (ISSUE 2): ESS ~ N on i.i.d. chains, ESS << N on a
+near-constant chain, split-R-hat ~ 1 on stationary chains and > 1.1 on
+divergent ones.  Everything here is numpy-only — no JAX.
+"""
+
+import numpy as np
+import pytest
+
+from repro import diagnostics
+
+
+class TestAutocorrTime:
+    def test_iid_tau_near_one(self):
+        x = np.random.default_rng(0).normal(size=(4000, 4))
+        tau = diagnostics.integrated_autocorr_time(x)
+        assert 0.7 < tau < 1.6, tau
+
+    def test_correlated_tau_grows(self):
+        """AR(1) with rho=0.9 has tau = (1+rho)/(1-rho) = 19."""
+        rng = np.random.default_rng(1)
+        n, rho = 20000, 0.9
+        x = np.zeros(n)
+        eps = rng.normal(size=n)
+        for t in range(1, n):
+            x[t] = rho * x[t - 1] + eps[t]
+        tau = diagnostics.integrated_autocorr_time(x)
+        assert 10 < tau < 30, tau
+
+    def test_clipped_to_chain_length(self):
+        x = np.repeat([0.0, 1.0], 50)  # one slow switch
+        tau = diagnostics.integrated_autocorr_time(x)
+        assert 1.0 <= tau <= x.size
+
+
+class TestESS:
+    def test_iid_ess_near_n(self):
+        x = np.random.default_rng(2).normal(size=(4000, 4))
+        ess = diagnostics.effective_sample_size(x)
+        n = x.size
+        assert 0.6 * n < ess < 1.5 * n, ess
+
+    def test_near_constant_ess_much_less_than_n(self):
+        """A chain that moves every 200 steps has ~n/200-ish independent
+        values; ESS must collapse far below N."""
+        rng = np.random.default_rng(3)
+        x = np.repeat(rng.normal(size=20), 200)  # 4000 steps, 20 moves
+        ess = diagnostics.effective_sample_size(x)
+        assert ess < 0.05 * x.size, ess
+
+    def test_constant_chain_degenerate_but_finite(self):
+        x = np.ones((100, 2))
+        ess = diagnostics.effective_sample_size(x)
+        assert np.isfinite(ess)
+        assert ess <= x.shape[1]  # tau = n_steps => ESS = n_chains
+
+
+class TestSplitRhat:
+    def test_stationary_near_one(self):
+        x = np.random.default_rng(4).normal(size=(2000, 4))
+        r = diagnostics.split_rhat(x)
+        assert 0.98 < r < 1.05, r
+
+    def test_divergent_chains_flagged(self):
+        rng = np.random.default_rng(5)
+        a = rng.normal(size=(1000, 2))
+        b = rng.normal(loc=3.0, size=(1000, 2))
+        r = diagnostics.split_rhat(np.concatenate([a, b], axis=1))
+        assert r > 1.1, r
+
+    def test_within_chain_drift_flagged(self):
+        """Splitting catches a trend a whole-chain R-hat would miss."""
+        drift = np.linspace(0.0, 5.0, 2000)[:, None]
+        x = np.random.default_rng(6).normal(size=(2000, 2)) * 0.1 + drift
+        assert diagnostics.split_rhat(x) > 1.1
+
+    def test_constant_chains_converged_by_convention(self):
+        assert diagnostics.split_rhat(np.zeros((100, 3))) == 1.0
+
+
+class TestSummarize:
+    def test_bundle_keys_and_acceptance(self):
+        x = np.random.default_rng(7).normal(size=(500, 3))
+        d = diagnostics.summarize(x, acceptance_rate=0.37)
+        for k in ("n_steps", "n_chains", "tau", "ess", "split_rhat"):
+            assert k in d
+        assert d["n_steps"] == 500 and d["n_chains"] == 3
+        assert d["acceptance_rate"] == pytest.approx(0.37)
+
+    def test_shape_validation(self):
+        with pytest.raises(ValueError):
+            diagnostics.summarize(np.zeros((2, 2, 2)))
+        with pytest.raises(ValueError):
+            diagnostics.integrated_autocorr_time(np.zeros((1,)))

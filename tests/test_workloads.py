@@ -1,0 +1,234 @@
+"""Workload zoo: Gibbs engine parity, Ising statistics, GMM posterior, CLI.
+
+The PR-1 parity guarantee (same key => bit-identical streams across
+executors and chunkings) must extend to the ``gibbs`` update rule, and
+the workloads must sample their nominal distributions.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import samplers, workloads
+from repro.kernels.gibbs import ops as gibbs_ops
+from repro.kernels.gibbs.ref import gibbs_chain_ref
+from repro.launch import sample as sample_cli
+from repro.workloads import gmm as gmm_wl
+from repro.workloads.ising import IsingModel
+
+
+def _gibbs_engine(**kw):
+    kw.setdefault("update", "gibbs")
+    return samplers.MHEngine(samplers.EngineConfig(**kw))
+
+
+def _lattice(b=2, h=8, w=8, seed=0):
+    model = IsingModel(height=h, width=w, beta=0.35)
+    init = model.random_init(jax.random.PRNGKey(seed), b)
+    return model, init
+
+
+class TestGibbsExecutionParity:
+    @pytest.mark.parametrize("randomness", ["host", "cim"])
+    def test_scan_and_pallas_bit_identical(self, randomness):
+        """The Gibbs half-sweep has one scan body and one kernel body that
+        mirror each other op-for-op => exact array equality."""
+        model, init = _lattice()
+        key = jax.random.PRNGKey(7)
+        r_scan = _gibbs_engine(
+            execution="scan", randomness=randomness, chunk_steps=16
+        ).run(key, model, 40, init)
+        r_pal = _gibbs_engine(
+            execution="pallas", randomness=randomness, chunk_steps=16
+        ).run(key, model, 40, init)
+        np.testing.assert_array_equal(
+            np.asarray(r_scan.samples), np.asarray(r_pal.samples)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(r_scan.accept_count), np.asarray(r_pal.accept_count)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(r_scan.final_logp), np.asarray(r_pal.final_logp)
+        )
+
+    @pytest.mark.parametrize("execution", ["scan", "pallas"])
+    def test_chunked_vs_monolithic_bit_identical(self, execution):
+        """Checkerboard parity rides the absolute step index, so chunking
+        cannot change the sweep schedule."""
+        model, init = _lattice(b=1, h=6, w=6, seed=1)
+        key = jax.random.PRNGKey(11)
+        r_chunked = _gibbs_engine(execution=execution, chunk_steps=7).run(
+            key, model, 30, init
+        )
+        r_mono = _gibbs_engine(execution=execution, chunk_steps=1000).run(
+            key, model, 30, init
+        )
+        np.testing.assert_array_equal(
+            np.asarray(r_chunked.samples), np.asarray(r_mono.samples)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(r_chunked.accept_count),
+            np.asarray(r_mono.accept_count),
+        )
+
+    def test_kernel_matches_ref_oracle(self):
+        """Same logit_fn on both sides: a mismatch isolates pallas_call
+        plumbing, not conditional math."""
+        model = IsingModel(height=8, width=8, beta=0.4, field=0.1)
+        key = jax.random.PRNGKey(3)
+        init = jax.random.bernoulli(key, 0.5, (2, 8, 8)).astype(jnp.uint32)
+        u = jax.random.uniform(jax.random.fold_in(key, 1), (20, 2, 8, 8))
+        s_k, f_k = gibbs_ops.gibbs_sweep(init, u, model.conditional_logit)
+        s_r, f_r = gibbs_chain_ref(init, u, model.conditional_logit)
+        np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+        np.testing.assert_array_equal(np.asarray(f_k), np.asarray(f_r))
+
+
+class TestGibbsSemantics:
+    def test_only_active_colour_updates(self):
+        """A half-sweep may only touch sites of its checkerboard parity."""
+        model, init = _lattice(b=1, h=8, w=8, seed=2)
+        res = _gibbs_engine(execution="scan", randomness="host").run(
+            jax.random.PRNGKey(0), model, 2, init
+        )
+        first = np.asarray(res.samples[0])
+        changed = first != np.asarray(init)
+        row, col = np.indices((8, 8))
+        inactive = ((row + col) % 2) != 0  # step 0 has parity 0
+        assert not changed[0][inactive].any()
+
+    def test_flip_rate_at_most_half(self):
+        model, init = _lattice()
+        res = _gibbs_engine(execution="scan").run(
+            jax.random.PRNGKey(5), model, 60, init
+        )
+        assert 0.0 < float(res.acceptance_rate) <= 0.5
+
+    @pytest.mark.slow
+    def test_beta_zero_matches_independent_spins(self):
+        """At beta=0 every active site resamples i.i.d. with
+        p(+1) = sigmoid(2h), so <s> -> tanh(h)."""
+        h_field = 0.3
+        model = IsingModel(height=16, width=16, beta=0.0, field=h_field)
+        init = model.random_init(jax.random.PRNGKey(0), 2)
+        res = _gibbs_engine(execution="scan", randomness="host").run(
+            jax.random.PRNGKey(9), model, 160, init
+        )
+        mags = np.asarray(model.magnetization(res.samples[40:]))
+        assert mags.mean() == pytest.approx(np.tanh(h_field), abs=0.03)
+
+    @pytest.mark.slow
+    def test_cold_lattice_orders(self):
+        """Deep below the critical point (beta >> 0.44) the lattice
+        magnetises: |<s>| climbs towards 1."""
+        model = IsingModel(height=12, width=12, beta=1.0)
+        init = model.random_init(jax.random.PRNGKey(1), 2)
+        res = _gibbs_engine(execution="scan", randomness="cim").run(
+            jax.random.PRNGKey(2), model, 400, init
+        )
+        mags = np.asarray(model.magnetization(res.samples[300:]))
+        assert np.abs(mags).mean() > 0.8
+
+
+class TestGibbsDispatch:
+    def test_update_rule_validation(self):
+        with pytest.raises(ValueError):
+            samplers.EngineConfig(update="metropolis-within-gibbs")
+
+    def test_gibbs_needs_conditional_target(self):
+        table = samplers.TableTarget(jnp.zeros((1, 16), jnp.float32))
+        with pytest.raises(ValueError, match="conditional"):
+            _gibbs_engine(execution="scan").run(
+                jax.random.PRNGKey(0), table, 4, jnp.zeros((1, 4), jnp.uint32)
+            )
+
+    def test_pallas_gibbs_needs_fused_lattice_model(self):
+        table = samplers.TableTarget(jnp.zeros((1, 16), jnp.float32))
+        with pytest.raises(ValueError, match="checkerboard"):
+            samplers.resolve_execution("pallas", table, "gibbs")
+
+    def test_auto_gibbs_is_always_scan(self):
+        """auto cannot see whether the lattice is lane-aligned, so it
+        never fuses Gibbs — explicit pallas opts in."""
+        model = IsingModel(height=4, width=4)
+        assert samplers.resolve_execution("auto", model, "gibbs") == "scan"
+
+    def test_pallas_gibbs_rejects_flat_state(self):
+        model, _ = _lattice()
+        with pytest.raises(ValueError, match="lattice state"):
+            _gibbs_engine(execution="pallas").run(
+                jax.random.PRNGKey(0), model, 4, jnp.zeros((16,), jnp.uint32)
+            )
+
+
+class TestGMMWorkload:
+    def test_scan_and_pallas_bit_identical(self):
+        key = jax.random.PRNGKey(0)
+        runs = {}
+        for backend in ("scan", "pallas"):
+            wl = workloads.build("gmm", key, smoke=True, backend=backend)
+            runs[backend] = wl.run(jax.random.PRNGKey(4))
+        np.testing.assert_array_equal(
+            np.asarray(runs["scan"].samples), np.asarray(runs["pallas"].samples)
+        )
+
+    def test_table_materialises_callable_exactly(self):
+        """The TableTarget rows are by construction the CallableTarget's
+        values at every word — same distribution, fused-kernel-eligible."""
+        mix, codec = gmm_wl.default_model()
+        callable_t = gmm_wl.make_callable_target(mix, codec)
+        table_t = gmm_wl.make_table_target(mix, codec)
+        words = jnp.arange(1 << codec.nbits, dtype=jnp.uint32)[None, :]
+        np.testing.assert_allclose(
+            np.asarray(callable_t.log_prob(words)),
+            np.asarray(table_t.log_prob(words)),
+            rtol=1e-6,
+        )
+
+    @pytest.mark.slow
+    def test_posterior_matches_reference_grid(self):
+        """Post burn-in histogram converges to the exact cell probabilities
+        (TV distance) — the MC²RAM benchmark's correctness claim."""
+        wl = workloads.build(
+            "gmm",
+            jax.random.PRNGKey(1),
+            randomness="host",
+            backend="scan",
+            chains=64,
+            n_steps=1500,
+        )
+        res = wl.run(jax.random.PRNGKey(2))
+        kept = np.asarray(res.samples[wl.burn_in:]).reshape(-1)
+        emp = np.bincount(kept, minlength=256) / kept.size
+        ref = gmm_wl.reference_probs(8)
+        tv = 0.5 * np.abs(emp - ref).sum()
+        assert tv < 0.08, f"TV {tv}"
+
+
+class TestRegistryAndCLI:
+    def test_unknown_workload_rejected(self):
+        with pytest.raises(ValueError, match="unknown workload"):
+            workloads.build("spin-glass", jax.random.PRNGKey(0))
+
+    @pytest.mark.parametrize("workload", ["ising", "gmm"])
+    @pytest.mark.parametrize("randomness", ["host", "cim"])
+    @pytest.mark.parametrize("backend", ["scan", "pallas"])
+    def test_cli_smoke_matrix(self, workload, randomness, backend, capsys):
+        """The PR's acceptance matrix: every workload completes under
+        every --randomness x --backend combination on CPU."""
+        row = sample_cli.main(
+            ["--workload", workload, "--smoke", "--steps", "12",
+             "--randomness", randomness, "--backend", backend]
+        )
+        assert row["workload"] == workload
+        assert row["update"] == ("gibbs" if workload == "ising" else "mh")
+        assert "ess" in row and "split_rhat" in row
+        assert f"workload={workload}" in capsys.readouterr().out
+
+    def test_cli_burn_in_slicing(self):
+        row = sample_cli.main(
+            ["--workload", "gmm", "--smoke", "--steps", "24",
+             "--randomness", "host"]
+        )
+        assert row["kept_steps"] == 24 - 24 // 4
