@@ -1,0 +1,42 @@
+"""Chain-scaling benchmark: throughput + ESS-per-joule vs num_chains.
+
+The CIM macro's 166.7 M samples/s comes from block-parallel random
+number generation — which maps onto many *independent chains* advancing
+in one device program (DESIGN.md §Chains-axis).  This table measures how
+the engine's chains axis actually scales: for C in {1, 4, 16}, run each
+zoo workload, report aggregate site-step throughput (all chains count)
+and cross-chain ESS per joule.  Ideal scaling doubles ESS/J with every
+doubling of C at flat wall-clock; the gap from ideal is the batching
+overhead the hardware story needs to know about.
+"""
+
+from __future__ import annotations
+
+from benchmarks.bench_workloads import bench_workload
+
+CHAIN_COUNTS = (1, 4, 16)
+
+
+def presets(smoke: bool = False):
+    if smoke:
+        return (
+            ("ising", "scan", dict(height=6, width=6, batch=1, n_steps=96)),
+            ("gmm", "pallas", dict(chains=16, n_steps=576)),
+        )
+    return (
+        ("ising", "scan", dict(height=8, width=8, batch=2, n_steps=192)),
+        ("gmm", "pallas", dict(chains=16, n_steps=384)),
+    )
+
+
+def run(smoke: bool = False) -> list[dict]:
+    rows = []
+    for name, execution, kwargs in presets(smoke):
+        for num_chains in CHAIN_COUNTS:
+            row = bench_workload(
+                name, execution, num_chains=num_chains,
+                repeats=5 if smoke else 1, **kwargs,
+            )
+            row["bench"] = "chain_scaling"
+            rows.append(row)
+    return rows

@@ -5,33 +5,77 @@ engine, time it, and fold in the chain diagnostics and the macro energy
 model: ESS per joule is the figure of merit that ties sample *quality*
 to the hardware's energy story (MC²RAM / Bashizade-style accounting —
 a sampler that mixes twice as fast is worth twice the joules).
+
+``run(smoke=True)`` uses tiny presets sized for the CI bench-smoke job
+(benchmarks/check_regression.py gates PRs on these rows).
 """
 
 from __future__ import annotations
 
+import functools
 import time
 
 import jax
+import jax.numpy as jnp
 
 from repro import workloads
 from repro.core import energy
 
 
-def _bench_one(name: str, execution: str, **kwargs) -> dict:
+@functools.lru_cache(maxsize=1)
+def machine_calibration() -> float:
+    """Reference FLOP-loop throughput (element-steps/s) of this machine.
+
+    A fixed, engine-independent jax scan measured best-of-3.  Every bench
+    row carries it so ``check_regression`` can compare *normalised*
+    throughput across machines — the committed baseline and the CI runner
+    are different hardware, and a raw wall-clock gate would just measure
+    that difference.
+    """
+    steps, side = 2000, 64
+    x = jnp.zeros((side, side), jnp.float32)
+
+    def body(c, _):
+        c = jnp.tanh(c * 1.000001 + 0.5)
+        return c, c.sum()
+
+    f = jax.jit(lambda v: jax.lax.scan(body, v, None, length=steps))
+    jax.block_until_ready(f(x))
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.time()
+        jax.block_until_ready(f(x))
+        best = min(best, time.time() - t0)
+    return steps * side * side / max(best, 1e-9)
+
+
+def bench_workload(
+    name: str, execution: str, num_chains: int = 1, repeats: int = 1, **kwargs
+) -> dict:
+    """One timed workload run folded with diagnostics + the energy model.
+
+    ``repeats`` re-times the run and keeps the fastest wall-clock —
+    best-of-N is what makes the tiny smoke presets stable enough for the
+    CI regression gate (a loaded runner inflates individual timings by
+    2x; the minimum tracks the actual compute).
+    """
     key = jax.random.PRNGKey(0)
     k_init, k_run = jax.random.split(key)
     wl = workloads.build(
-        name, k_init, randomness="cim", backend=execution, **kwargs
+        name, k_init, randomness="cim", backend=execution,
+        num_chains=num_chains, **kwargs,
     )
-    # warm-up compile, then timed run
+    # warm-up compile, then timed runs (keep the fastest + its result)
     jax.block_until_ready(wl.run(k_run).samples)
-    t0 = time.time()
-    result = wl.run(k_run)
-    jax.block_until_ready(result.samples)
-    wall_s = time.time() - t0
+    wall_s = float("inf")
+    for _ in range(max(1, repeats)):
+        t0 = time.time()
+        result = wl.run(k_run)
+        jax.block_until_ready(result.samples)
+        wall_s = min(wall_s, time.time() - t0)
 
     diag = wl.diagnostics(result)
-    n_sites = int(wl.init_words.size)
+    n_sites = int(wl.init_words.size)  # includes the chains axis
     site_steps = wl.n_steps * n_sites
     nbits = int(wl.meta.get("nbits", 4))
     macro_j = (
@@ -43,10 +87,12 @@ def _bench_one(name: str, execution: str, **kwargs) -> dict:
         "bench": "workloads",
         "workload": name,
         "execution": execution,
+        "num_chains": num_chains,
         "n_steps": wl.n_steps,
         "n_sites": n_sites,
         "wall_s": round(wall_s, 3),
         "site_steps_per_s": round(site_steps / max(wall_s, 1e-9), 1),
+        "calib_steps_per_s": round(machine_calibration(), 1),
         "acceptance": diag["acceptance_rate"],
         "tau": diag["tau"],
         "ess": diag["ess"],
@@ -56,12 +102,28 @@ def _bench_one(name: str, execution: str, **kwargs) -> dict:
     }
 
 
-def run() -> list[dict]:
-    rows = []
-    for name, kwargs in (
+def presets(smoke: bool = False):
+    # smoke sizes are chosen so even the fastest (pallas) rows spend
+    # ~0.1 s+ in the chain proper — dispatch overhead must not dominate
+    # a timing that the CI regression gate compares across machines
+    if smoke:
+        return (
+            ("ising", dict(height=8, width=8, batch=2, n_steps=384)),
+            ("gmm", dict(chains=32, n_steps=384)),
+        )
+    return (
         ("ising", dict(height=8, width=8, batch=4, n_steps=256)),
         ("gmm", dict(chains=32, n_steps=512)),
-    ):
+    )
+
+
+def run(smoke: bool = False) -> list[dict]:
+    rows = []
+    for name, kwargs in presets(smoke):
         for execution in ("scan", "pallas"):
-            rows.append(_bench_one(name, execution, **kwargs))
+            rows.append(
+                bench_workload(
+                    name, execution, repeats=5 if smoke else 1, **kwargs
+                )
+            )
     return rows

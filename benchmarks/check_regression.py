@@ -1,0 +1,155 @@
+"""Bench-regression gate: fail CI when throughput drops vs the baseline.
+
+Compares a freshly generated benchmark aggregate (``benchmarks.run
+--smoke --out fresh.json``) against the committed baseline
+(``BENCH_workloads.json``).  For every table present in both files, rows
+are matched on their *configuration* keys (everything that is not a
+measured quantity); a matched row regresses when its throughput falls
+more than ``--threshold`` (default 30%) below the baseline.  A baseline
+row with no fresh counterpart also fails — a vanished row is how a
+regression hides.
+
+  PYTHONPATH=src python -m benchmarks.check_regression \
+      --fresh bench_smoke.json --baseline BENCH_workloads.json
+
+Exit code 0 = within budget, 1 = regression (or malformed inputs).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# measured outputs; everything else in a row is configuration identity
+MEASURED_FIELDS = frozenset({
+    "wall_s",
+    "site_steps_per_s",
+    "calib_steps_per_s",
+    "acceptance",
+    "tau",
+    "ess",
+    "split_rhat",
+    "macro_energy_uj",
+    "ess_per_joule",
+    "window_capped",
+})
+
+THROUGHPUT_FIELD = "site_steps_per_s"
+CALIBRATION_FIELD = "calib_steps_per_s"
+
+
+def normalized_throughput(row: dict) -> float:
+    """Throughput divided by the row's machine-calibration factor (when
+    present on both sides of a comparison) — baseline and CI run on
+    different hardware, and the gate must measure the *code*, not the
+    runner."""
+    thpt = float(row[THROUGHPUT_FIELD])
+    calib = row.get(CALIBRATION_FIELD)
+    return thpt / float(calib) if calib else thpt
+
+
+def row_identity(row: dict) -> tuple:
+    return tuple(
+        sorted((k, str(v)) for k, v in row.items() if k not in MEASURED_FIELDS)
+    )
+
+
+def load_tables(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    tables = data.get("tables")
+    if not isinstance(tables, dict):
+        raise ValueError(f"{path}: no 'tables' mapping (format 1 expected)")
+    return tables
+
+
+MIN_WALL_S = 0.05  # baseline rows faster than this are dispatch noise
+
+
+def compare(
+    fresh: dict, baseline: dict, threshold: float
+) -> tuple[list[str], int]:
+    """(failure messages, number of rows compared).
+
+    Rows whose *baseline* wall-clock is under ``MIN_WALL_S`` are skipped:
+    a timing that small measures dispatch overhead, not the chain, and
+    the calibration factor only models compute throughput."""
+    failures = []
+    compared = 0
+    for table in sorted(set(fresh) & set(baseline)):
+        base_rows = {
+            row_identity(r): r
+            for r in baseline[table]
+            if THROUGHPUT_FIELD in r
+        }
+        fresh_rows = {
+            row_identity(r): r
+            for r in fresh[table]
+            if THROUGHPUT_FIELD in r
+        }
+        for ident, base in sorted(base_rows.items()):
+            label = f"{table}: " + " ".join(f"{k}={v}" for k, v in ident)
+            got = fresh_rows.get(ident)
+            if got is None:
+                failures.append(f"MISSING  {label}")
+                continue
+            if float(base.get("wall_s", MIN_WALL_S)) < MIN_WALL_S:
+                print(f"  skipped (wall_s < {MIN_WALL_S}s): {label}")
+                continue
+            compared += 1
+            if CALIBRATION_FIELD in base and CALIBRATION_FIELD in got:
+                b, f = normalized_throughput(base), normalized_throughput(got)
+                unit = f"{THROUGHPUT_FIELD}/calib"
+            else:  # legacy rows without calibration: raw wall-clock gate
+                b = float(base[THROUGHPUT_FIELD])
+                f = float(got[THROUGHPUT_FIELD])
+                unit = THROUGHPUT_FIELD
+            floor = (1.0 - threshold) * b
+            if f < floor:
+                failures.append(
+                    f"REGRESSED  {label}: {unit} "
+                    f"{f:.3g} < {floor:.3g} (baseline {b:.3g}, "
+                    f"-{(1 - f / b) * 100:.0f}%)"
+                )
+    return failures, compared
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="benchmarks.check_regression",
+        description="Gate throughput against the committed bench baseline.",
+    )
+    p.add_argument("--fresh", required=True, help="freshly generated aggregate")
+    p.add_argument(
+        "--baseline", default="BENCH_workloads.json", help="committed baseline"
+    )
+    p.add_argument(
+        "--threshold", type=float, default=0.30,
+        help="max allowed fractional throughput drop (default 0.30)",
+    )
+    args = p.parse_args(argv)
+    fresh = load_tables(args.fresh)
+    baseline = load_tables(args.baseline)
+    shared = sorted(set(fresh) & set(baseline))
+    if not shared:
+        print(
+            f"no shared tables between {args.fresh} ({sorted(fresh)}) and "
+            f"{args.baseline} ({sorted(baseline)})"
+        )
+        return 1
+    failures, compared = compare(fresh, baseline, args.threshold)
+    if failures:
+        print(f"bench regression check FAILED ({len(failures)} problems):")
+        for msg in failures:
+            print(f"  {msg}")
+        return 1
+    print(
+        f"bench regression check passed: {compared} rows across "
+        f"{len(shared)} tables within {args.threshold:.0%} of baseline"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

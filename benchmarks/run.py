@@ -9,13 +9,22 @@ the tables it executed).
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run fig17      # name filter
+  PYTHONPATH=src python -m benchmarks.run --smoke    # CI bench-smoke job
+
+``--smoke`` runs only the modules that expose tiny presets
+(``run(smoke=True)``), writes their tables under a ``_smoke`` suffix —
+so a smoke run never clobbers the full-size rows — and is what the CI
+bench job regenerates and gates via ``benchmarks.check_regression``.
+``--out`` redirects the aggregate (CI writes a fresh file and compares
+it against the committed baseline).
 """
 
 from __future__ import annotations
 
+import argparse
+import inspect
 import json
 import os
-import sys
 import time
 
 MODULES = [
@@ -30,10 +39,15 @@ MODULES = [
     ("token_sampler", "benchmarks.bench_token_sampler"),
     ("gray_ablation", "benchmarks.bench_gray_ablation"),
     ("workloads", "benchmarks.bench_workloads"),
+    ("chain_scaling", "benchmarks.bench_chain_scaling"),
 ]
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 AGGREGATE_PATH = os.path.join(_REPO_ROOT, "BENCH_workloads.json")
+
+
+def _supports_smoke(run_fn) -> bool:
+    return "smoke" in inspect.signature(run_fn).parameters
 
 
 def write_aggregate(tables: dict, path: str = AGGREGATE_PATH) -> None:
@@ -51,18 +65,41 @@ def write_aggregate(tables: dict, path: str = AGGREGATE_PATH) -> None:
         f.write("\n")
 
 
-def main() -> None:
-    flt = sys.argv[1] if len(sys.argv) > 1 else ""
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="benchmarks.run", description="Run the benchmark tables."
+    )
+    p.add_argument("filter", nargs="?", default="", help="table-name filter")
+    p.add_argument(
+        "--smoke", action="store_true",
+        help="tiny presets; only smoke-capable modules; *_smoke table names",
+    )
+    p.add_argument(
+        "--out", default=AGGREGATE_PATH,
+        help=f"aggregate JSON path (default {AGGREGATE_PATH})",
+    )
+    return p
+
+
+def main(argv=None) -> None:
+    args = build_parser().parse_args(argv)
     failures = []
     tables = {}
     for name, modpath in MODULES:
-        if flt and flt not in name:
+        if args.filter and args.filter not in name:
             continue
         print(f"\n=== {name} ({modpath}) ===")
         t0 = time.time()
         try:
             mod = __import__(modpath, fromlist=["run"])
-            rows = mod.run()
+            if args.smoke:
+                if not _supports_smoke(mod.run):
+                    print("  [skipped: no smoke presets]")
+                    continue
+                name = f"{name}_smoke"
+                rows = mod.run(smoke=True)
+            else:
+                rows = mod.run()
             for row in rows:
                 print("  " + "  ".join(f"{k}={v}" for k, v in row.items()))
             print(f"  [{len(rows)} rows, {time.time() - t0:.1f}s]")
@@ -73,8 +110,8 @@ def main() -> None:
             traceback.print_exc()
             failures.append((name, repr(e)))
     if tables:
-        write_aggregate(tables)
-        print(f"\naggregated {len(tables)} tables -> {AGGREGATE_PATH}")
+        write_aggregate(tables, path=args.out)
+        print(f"\naggregated {len(tables)} tables -> {args.out}")
     if failures:
         print("\nFAILED:", failures)
         raise SystemExit(1)

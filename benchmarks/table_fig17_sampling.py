@@ -15,7 +15,6 @@ all three so the speedup is apples-to-apples at matched fidelity.
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import energy, metropolis, targets

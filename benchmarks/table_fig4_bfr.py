@@ -5,7 +5,6 @@ Monte-Carlo check that simulated pseudo-reads reproduce the curve.
 """
 
 import jax
-import numpy as np
 
 from repro.core import bitcell
 

@@ -22,7 +22,6 @@ import dataclasses
 import enum
 from typing import Callable
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -11,7 +11,7 @@ widths (documented in EXPERIMENTS.md §Perf).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -10,3 +10,7 @@ from repro.diagnostics.chain_stats import (  # noqa: F401
     split_rhat,
     summarize,
 )
+from repro.diagnostics.streaming import (  # noqa: F401
+    StreamingChainStats,
+    summarize_stream,
+)

@@ -19,7 +19,7 @@ replicated dim over ("pod", "data") via ``add_zero_axes``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Iterable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +36,7 @@ DEFAULT_RULES: dict[str, Any] = {
     "vocab": "model",
     "experts": "model",
     "ssm_heads": "model",
+    "chains": ("pod", "data"),  # sampler-engine chain axis (DP-like)
     "seq_ctx": "data",      # context parallelism (long-context decode)
     "seq_sp": "model",      # sequence parallelism on the residual stream
     # replicated logical axes
@@ -116,7 +117,10 @@ def active_mesh():
 
 
 def _mesh_axis_size(mesh, axis) -> int:
-    return dict(zip(mesh.axis_names, mesh.axis_sizes))[axis]
+    sizes = getattr(mesh, "axis_sizes", None)  # absent on old-jax Mesh
+    if sizes is None:
+        return dict(mesh.shape)[axis]
+    return dict(zip(mesh.axis_names, sizes))[axis]
 
 
 def _manual_axes(mesh) -> set:

@@ -16,14 +16,10 @@ block-skipping variant).
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import shard
-from repro.models import layers
 from repro.models.layers import param, rms_norm, apply_rope, val
 
 NEG_INF = -1e30

@@ -239,7 +239,7 @@ def moe_ffn_ep(params, x, cfg, act, mesh, axis: str = "model"):
     return out, aux
 
 
-import os as _os
+import os as _os  # noqa: E402  (kept beside the env-var escape hatch below)
 
 # The explicit shard_map EP path trips an XLA SPMD CHECK-crash ("Invalid
 # binary instruction opcode copy") when a partial-auto shard_map sits inside

@@ -25,6 +25,8 @@ from repro.samplers.randomness import (  # noqa: F401
     CIMRandomness,
     HostRandomness,
     RandomnessBackend,
+    chain_key,
+    chain_keys,
     make_randomness_backend,
 )
 from repro.samplers.targets import (  # noqa: F401

@@ -40,14 +40,11 @@ import jax.numpy as jnp
 
 from repro.samplers.randomness import (
     RandomnessBackend,
+    chain_key,
+    chain_keys,
     make_randomness_backend,
 )
-from repro.samplers.targets import (
-    CallableTarget,
-    TableTarget,
-    TopKTarget,
-    logits_target,
-)
+from repro.samplers.targets import logits_target
 
 Array = jnp.ndarray
 
@@ -68,6 +65,7 @@ class EngineConfig:
     execution: str = "auto"          # auto | scan | pallas
     chunk_steps: int = 64            # randomness streaming granularity
     block_c: int = 256               # pallas chain-axis block size
+    num_chains: int = 1              # independent chains (DESIGN.md §Chains)
 
     def __post_init__(self):
         if self.execution not in _EXECUTION_CHOICES:
@@ -85,6 +83,8 @@ class EngineConfig:
             )
         if self.chunk_steps < 1:
             raise ValueError(f"chunk_steps must be >= 1, got {self.chunk_steps}")
+        if self.num_chains < 1:
+            raise ValueError(f"num_chains must be >= 1, got {self.num_chains}")
 
     def backend(self) -> RandomnessBackend:
         return make_randomness_backend(
@@ -303,6 +303,134 @@ def _run_pallas_gibbs(key, target, backend, n_steps, chunk, init_words):
     return samples, acc, state
 
 
+# --- chains axis (DESIGN.md §Chains-axis) ----------------------------------
+#
+# C independent chains run in ONE device program.  Per-chain randomness is
+# counter-derived — chain c streams from fold_in(key, c), then per-step
+# fold_in(·, t) — so chain c of a C-chain run is bit-identical to a solo
+# run with chain_id=c.  The scan executor vmaps over the chain axis; the
+# fused Pallas kernels get a *batched grid*: chains fold into the
+# compartment axis (mh, grid (B, C·Cc/BLOCK_C)) or the lattice-batch axis
+# (gibbs, grid (C·B,)) — both grids block over exactly the folded axis, and
+# every op is per-column/per-lattice, so folding preserves bit-parity.
+
+
+def _chains_fold_mh(x):
+    """(C, K, B, Cc) operands -> (K, B, C*Cc): chains ride the compartment
+    axis, chain-major blocks so chain c owns columns [c*Cc, (c+1)*Cc)."""
+    c, k, b, cc = x.shape
+    return jnp.transpose(x, (1, 2, 0, 3)).reshape(k, b, c * cc)
+
+
+def _run_pallas_chains(
+    keys, target, backend, nbits, n_steps, chunk, block_c, init
+):
+    """Fused MH over C chains: one batched-grid kernel program per chunk."""
+    from repro.kernels.mh import ops as mh_ops  # avoid import cycle
+
+    if init.ndim != 3:
+        raise ValueError(
+            f"multi-chain pallas execution expects (num_chains, B, C) chain "
+            f"state, got {init.shape}"
+        )
+    c_chains, b, cc = init.shape
+    state = jnp.transpose(init.astype(jnp.uint32), (1, 0, 2)).reshape(
+        b, c_chains * cc
+    )
+    acc = jnp.zeros(state.shape, jnp.int32)
+    pieces = []
+    chunk = max(1, min(chunk, n_steps))
+    for start in range(0, n_steps, chunk):
+        n = min(chunk, n_steps - start)
+        flips, u = jax.vmap(
+            lambda k: backend.chunk(k, start, n, (b, cc), nbits)
+        )(keys)
+        samples, a = mh_ops.mh_sample(
+            target.table, state, _chains_fold_mh(flips), _chains_fold_mh(u),
+            nbits=nbits, block_c=block_c,
+        )
+        state = samples[-1]
+        acc = acc + a
+        pieces.append(samples)
+    samples = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, 0)
+
+    def unfold(x):  # (..., B, C*Cc) -> (C, ..., B, Cc)
+        lead = x.shape[:-2]
+        x = x.reshape(*lead, b, c_chains, cc)
+        return jnp.moveaxis(x, -2, 0)
+
+    logp = target.log_prob(state).astype(jnp.float32)
+    return unfold(samples), unfold(acc), unfold(state), unfold(logp)
+
+
+def _run_pallas_gibbs_chains(keys, target, backend, n_steps, chunk, init):
+    """Fused checkerboard Gibbs over C chains: chains fold into the
+    lattice-batch grid axis."""
+    from repro.kernels.gibbs import ops as gibbs_ops  # avoid import cycle
+
+    if init.ndim != 4:
+        raise ValueError(
+            f"multi-chain pallas Gibbs expects (num_chains, B, H, W) lattice "
+            f"state, got {init.shape}"
+        )
+    c_chains, b, h, w = init.shape
+    state = init.astype(jnp.uint32).reshape(c_chains * b, h, w)
+    acc = jnp.zeros(state.shape, jnp.int32)
+    pieces = []
+    chunk = max(1, min(chunk, n_steps))
+    for start in range(0, n_steps, chunk):
+        n = min(chunk, n_steps - start)
+        u = jax.vmap(
+            lambda k: backend.chunk(k, start, n, (b, h, w), 1)[1]
+        )(keys)
+        u_fold = jnp.transpose(u, (1, 0, 2, 3, 4)).reshape(
+            n, c_chains * b, h, w
+        )
+        samples, flips = gibbs_ops.gibbs_sweep(
+            state, u_fold, target.conditional_logit, parity0=start % 2
+        )
+        state = samples[-1]
+        acc = acc + flips
+        pieces.append(samples)
+    samples = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, 0)
+
+    def unfold(x):  # (..., C*B, H, W) -> (C, ..., B, H, W)
+        lead = x.shape[:-3]
+        x = x.reshape(*lead, c_chains, b, h, w)
+        return jnp.moveaxis(x, len(lead), 0)
+
+    return unfold(samples), unfold(acc), unfold(state)
+
+
+def _shard_over_chains(body, mesh, num_chains: int, n_out: int):
+    """Wrap ``body(keys, init)`` in shard_map over the mesh's chains axes.
+
+    The "chains" logical axis resolves through the standard sharding-rules
+    table (distributed/sharding.py), including the divisibility filter — a
+    chain count the mesh doesn't divide runs replicated (unsharded) rather
+    than padded, and a mesh-less call is the identity.  Chains never
+    communicate, so the sharded program is collective-free and
+    bit-identical to the unsharded one.
+    """
+    if mesh is None:
+        return body
+    from jax.experimental.shard_map import shard_map
+
+    from repro.distributed import sharding
+
+    spec = sharding.spec_for(("chains",), shape=(num_chains,), mesh=mesh)
+    if spec is None or len(spec) == 0 or spec[0] is None:
+        return body
+    p = jax.sharding.PartitionSpec(spec[0])
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(p, p),
+        out_specs=tuple(p for _ in range(n_out)),
+        check_rep=False,
+    )
+
+
 class MHEngine:
     """One sampler engine, pluggable on all four axes (the name predates
     the ``gibbs`` update rule; ``SamplerEngine`` aliases it).
@@ -320,7 +448,10 @@ class MHEngine:
     def randomness(self) -> RandomnessBackend:
         return self._backend
 
-    def run(self, key, target, n_steps: int, init_words) -> EngineResult:
+    def run(
+        self, key, target, n_steps: int, init_words, *,
+        chain_id: int = 0, mesh=None,
+    ) -> EngineResult:
         """Run ``n_steps`` of the configured update rule from
         ``init_words``; collect every state.
 
@@ -331,9 +462,29 @@ class MHEngine:
         each step is one checkerboard half-sweep, ``accept_count`` is the
         per-site flip count, and ``final_logp`` is the per-site
         conditional log-prob (pseudo-likelihood) of the final state.
+
+        **Chains axis** (DESIGN.md §Chains-axis): with
+        ``config.num_chains == C > 1`` this runs C independent chains in
+        one device program; ``init_words`` must carry a leading (C,)
+        axis (broadcast a shared solo init yourself — the engine never
+        guesses, a coincidental first dim would be misread) and every
+        result field gains that leading axis.  Randomness is counter-derived per
+        ``(chain_id, absolute_step)``, so chain c of a C-chain run is
+        bit-identical to a solo run with ``chain_id=c``; in a multi-chain
+        run ``chain_id`` acts as the chain-id *base* (chains cover
+        [chain_id, chain_id + C), so two C-chain runs with bases 0 and C
+        compose into the 2C-chain run).  ``mesh`` (a
+        concrete ``jax.sharding.Mesh``) shards the chain axis across
+        devices via ``shard_map`` under the "chains" sharding rule;
+        chains never communicate, so sharded == unsharded bit-for-bit.
         """
         if n_steps < 1:
             raise ValueError(f"n_steps must be >= 1, got {n_steps}")
+        if self.config.num_chains > 1:
+            return self._run_chains(
+                key, target, n_steps, init_words, mesh, base=chain_id
+            )
+        key = chain_key(key, chain_id)
         if self.config.update == "gibbs":
             return self._run_gibbs(key, target, n_steps, init_words)
         execution = resolve_execution(self.config.execution, target)
@@ -373,6 +524,94 @@ class MHEngine:
             words == 1, jax.nn.log_sigmoid(logit), jax.nn.log_sigmoid(-logit)
         ).astype(jnp.float32)
         total = jnp.float32(n_steps) * jnp.float32(max(1, init_words.size))
+        return EngineResult(
+            samples=samples,
+            accept_count=acc,
+            acceptance_rate=jnp.sum(acc).astype(jnp.float32) / total,
+            final_words=words,
+            final_logp=logp,
+            n_steps=jnp.int32(n_steps),
+        )
+
+    def _run_chains(
+        self, key, target, n_steps: int, init_words, mesh, base: int = 0
+    ):
+        """C independent chains in one device program (optionally sharded).
+
+        ``base`` offsets the chain ids: the run covers chains
+        [base, base + C), so two C-chain runs with bases 0 and C compose
+        into exactly the 2C-chain run's streams.
+        """
+        cfg = self.config
+        num_chains = cfg.num_chains
+        init = jnp.asarray(init_words)
+        # the leading axis is ALWAYS the chain axis — never guessed from
+        # shape coincidences (a solo init whose first dim happens to equal
+        # num_chains would be silently misread); broadcast explicitly
+        if init.ndim == 0 or init.shape[0] != num_chains:
+            raise ValueError(
+                f"multi-chain init_words must carry a leading "
+                f"(num_chains={num_chains},) axis, got {init.shape}; "
+                f"broadcast a solo init with "
+                f"jnp.broadcast_to(init, ({num_chains}, *init.shape))"
+            )
+        keys = chain_keys(key, num_chains, base=base)
+        if cfg.update == "gibbs":
+            if not hasattr(target, "conditional_logit"):
+                raise ValueError(
+                    "gibbs update needs a conditional target exposing "
+                    "conditional_logit/update_mask (e.g. workloads.ising."
+                    f"IsingModel); got {type(target).__name__}"
+                )
+            execution = resolve_execution(cfg.execution, target, "gibbs")
+            if execution == "scan":
+
+                def body(ks, ini):
+                    return jax.vmap(
+                        lambda k, w: _run_scan_gibbs(
+                            k, target, self._backend, n_steps,
+                            cfg.chunk_steps, w,
+                        )
+                    )(ks, ini)
+            else:
+
+                def body(ks, ini):
+                    return _run_pallas_gibbs_chains(
+                        ks, target, self._backend, n_steps, cfg.chunk_steps,
+                        ini,
+                    )
+
+            body = _shard_over_chains(body, mesh, num_chains, 3)
+            samples, acc, words = body(keys, init)
+            logit = target.conditional_logit(words)
+            logp = jnp.where(
+                words == 1,
+                jax.nn.log_sigmoid(logit),
+                jax.nn.log_sigmoid(-logit),
+            ).astype(jnp.float32)
+        else:
+            execution = resolve_execution(cfg.execution, target)
+            nbits = target.nbits
+            if execution == "scan":
+
+                def body(ks, ini):
+                    return jax.vmap(
+                        lambda k, w: _run_scan(
+                            k, target, self._backend, nbits, n_steps,
+                            cfg.chunk_steps, w,
+                        )
+                    )(ks, ini)
+            else:
+
+                def body(ks, ini):
+                    return _run_pallas_chains(
+                        ks, target, self._backend, nbits, n_steps,
+                        cfg.chunk_steps, cfg.block_c, ini,
+                    )
+
+            body = _shard_over_chains(body, mesh, num_chains, 4)
+            samples, acc, words, logp = body(keys, init)
+        total = jnp.float32(n_steps) * jnp.float32(max(1, init.size))
         return EngineResult(
             samples=samples,
             accept_count=acc,

@@ -36,6 +36,24 @@ from repro.core import bitcell, uniform_rng
 Array = jnp.ndarray
 
 
+def chain_key(key, chain_id) -> Array:
+    """Counter-based per-chain key (DESIGN.md §Chains-axis).
+
+    Every engine run — solo or multi-chain — derives its stream from
+    ``fold_in(key, chain_id)`` and then per-step ``fold_in(·, t)``, so
+    the operands for (chain c, step t) are a pure function of
+    ``(key, c, t)``.  Chain c of a C-chain run is therefore bit-identical
+    to a solo run launched with ``chain_id=c``, for any C.
+    """
+    return jax.random.fold_in(key, chain_id)
+
+
+def chain_keys(key, num_chains: int, base: int = 0) -> Array:
+    """Stacked per-chain keys for chains [base, base + num_chains)."""
+    ids = base + jnp.arange(num_chains, dtype=jnp.int32)
+    return jax.vmap(lambda c: chain_key(key, c))(ids)
+
+
 def step_keys(key, start, n_steps: int) -> Array:
     """Per-step keys for absolute steps [start, start + n_steps)."""
     ts = jnp.asarray(start, jnp.int32) + jnp.arange(n_steps, dtype=jnp.int32)

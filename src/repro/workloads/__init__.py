@@ -41,15 +41,50 @@ class WorkloadRun:
     series_fn: Callable          # samples (K, *chain) -> (K, n_chains) stat
     meta: dict
 
-    def run(self, key) -> samplers.EngineResult:
-        return self.engine.run(key, self.target, self.n_steps, self.init_words)
+    def run(self, key, mesh=None) -> samplers.EngineResult:
+        """Run the chains; ``mesh`` shards the engine's chains axis
+        (DESIGN.md §Chains-axis) and is a no-op for solo runs."""
+        return self.engine.run(
+            key, self.target, self.n_steps, self.init_words, mesh=mesh
+        )
+
+    def series(self, result: samplers.EngineResult) -> np.ndarray:
+        """(T, n_columns) scalar-statistic block; a multi-chain run's
+        chains contribute their columns side by side."""
+        num_chains = self.engine.config.num_chains
+        if num_chains == 1:
+            series = np.asarray(self.series_fn(result.samples))
+            return series.reshape(series.shape[0], -1)
+        cols = [
+            np.asarray(self.series_fn(result.samples[c])).reshape(
+                result.samples.shape[1], -1
+            )
+            for c in range(num_chains)
+        ]
+        return np.concatenate(cols, axis=1)
 
     def diagnostics(self, result: samplers.EngineResult) -> dict:
-        """Chain diagnostics over the post-burn-in scalar statistic."""
-        series = np.asarray(self.series_fn(result.samples))
-        series = series.reshape(series.shape[0], -1)
-        return diagnostics.summarize(
-            series[self.burn_in:],
+        """Chain diagnostics over the post-burn-in scalar statistic.
+
+        Multi-chain runs feed the (T, C·m) block through
+        ``diagnostics.StreamingChainStats`` in ``chunk_steps``-sized
+        chunks.  Here the block already sits in host memory (the engine
+        collects every state), so this exercises the streaming
+        estimators' contract on every run rather than saving memory; the
+        O(chunk) benefit is realised by producers that feed the
+        accumulator chunk-by-chunk without materialising T (see
+        DESIGN.md §Chains-axis).
+        """
+        series = self.series(result)[self.burn_in:]
+        if self.engine.config.num_chains == 1:
+            return diagnostics.summarize(
+                series, acceptance_rate=float(result.acceptance_rate)
+            )
+        chunk = max(1, self.engine.config.chunk_steps)
+        return diagnostics.summarize_stream(
+            (series[s : s + chunk] for s in range(0, series.shape[0], chunk)),
+            num_chains=series.shape[1],
+            total_steps=series.shape[0],
             acceptance_rate=float(result.acceptance_rate),
         )
 

@@ -66,8 +66,14 @@ def build(
     chains: int | None = None,
     n_steps: int | None = None,
     chunk_steps: int = 32,
+    num_chains: int = 1,
 ):
-    """Assemble the GMM posterior workload (see workloads.WorkloadRun)."""
+    """Assemble the GMM posterior workload (see workloads.WorkloadRun).
+
+    ``chains`` is the macro's lock-step compartment axis (one table, C
+    columns); ``num_chains`` is the engine's independent-chains axis
+    (DESIGN.md §Chains-axis), with counter-derived per-chain inits.
+    """
     from repro import workloads  # deferred: workloads imports this module
 
     nbits = nbits or 8
@@ -82,11 +88,16 @@ def build(
             randomness=randomness,
             execution=backend,
             chunk_steps=chunk_steps,
+            num_chains=num_chains,
         )
     )
-    init = jax.random.randint(
-        key, (1, chains), 0, 1 << nbits, dtype=jnp.int32
-    ).astype(jnp.uint32)
+    init = jax.vmap(
+        lambda k: jax.random.randint(
+            k, (1, chains), 0, 1 << nbits, dtype=jnp.int32
+        ).astype(jnp.uint32)
+    )(samplers.chain_keys(key, num_chains))
+    if num_chains == 1:
+        init = init[0]
 
     def series_fn(samples: Array) -> Array:
         # (K, 1, C) words -> (K, C) decoded x coordinates
@@ -104,6 +115,7 @@ def build(
         meta={
             "nbits": nbits,
             "chains": chains,
+            "num_chains": num_chains,
             "components": len(gmm.weights),
             "statistic": "x",
         },

@@ -129,8 +129,15 @@ def build(
     field: float = 0.0,
     n_steps: int | None = None,
     chunk_steps: int = 32,
+    num_chains: int = 1,
 ):
-    """Assemble the Ising workload (see workloads.WorkloadRun)."""
+    """Assemble the Ising workload (see workloads.WorkloadRun).
+
+    ``num_chains`` runs C independent chains in one device program
+    (DESIGN.md §Chains-axis); inits are counter-derived per chain —
+    ``random_init(chain_key(key, c))`` — so chain c of a C-chain build
+    is bit-identical to a solo build, inits included.
+    """
     from repro import workloads  # deferred: workloads imports this module
 
     height = height or (8 if smoke else 16)
@@ -149,19 +156,24 @@ def build(
             randomness=randomness,
             execution=backend,
             chunk_steps=chunk_steps,
+            num_chains=num_chains,
         )
     )
+    init = jax.vmap(
+        lambda k: model.random_init(k, batch)
+    )(samplers.chain_keys(key, num_chains))
     return workloads.WorkloadRun(
         name="ising",
         engine=engine,
         target=model,
-        init_words=model.random_init(key, batch),
+        init_words=init[0] if num_chains == 1 else init,
         n_steps=n_steps,
         burn_in=n_steps // 4,
         series_fn=model.magnetization,
         meta={
             "lattice": f"{height}x{width}",
             "batch": batch,
+            "num_chains": num_chains,
             "beta": model.beta,
             "field": field,
             "nbits": 1,

@@ -79,6 +79,76 @@ class TestSplitRhat:
         assert diagnostics.split_rhat(np.zeros((100, 3))) == 1.0
 
 
+class TestStreaming:
+    """StreamingChainStats must reproduce the batch estimators from
+    chunked consumption (the §Chains-axis O(chunk)-memory contract)."""
+
+    @staticmethod
+    def _ar1(n=3000, chains=4, rho=0.8, seed=0):
+        rng = np.random.default_rng(seed)
+        x = np.zeros((n, chains))
+        eps = rng.normal(size=(n, chains))
+        for t in range(1, n):
+            x[t] = rho * x[t - 1] + eps[t]
+        return x
+
+    def test_stream_equals_batch_summarize(self):
+        """Ragged chunk boundaries, same rounded bundle as the batch
+        path — tau, ESS, split-R-hat, mean, std, everything."""
+        x = self._ar1()
+        batch = diagnostics.summarize(x, acceptance_rate=0.4)
+        acc = diagnostics.StreamingChainStats(4, x.shape[0], max_lag=400)
+        for s in range(0, x.shape[0], 37):
+            acc.update(x[s : s + 37])
+        assert acc.summarize(acceptance_rate=0.4) == batch
+
+    def test_chunk_size_invariance(self):
+        x = self._ar1(n=500, chains=2, seed=1)
+        outs = []
+        for chunk in (1, 7, 100, 500):
+            outs.append(
+                diagnostics.summarize_stream(
+                    (x[s : s + chunk] for s in range(0, 500, chunk)),
+                    num_chains=2, total_steps=500, max_lag=200,
+                )
+            )
+        assert all(o == outs[0] for o in outs)
+
+    def test_memory_is_bounded_by_max_lag(self):
+        """The accumulator's buffers never exceed O(chains * max_lag)
+        regardless of stream length — the whole point of streaming."""
+        acc = diagnostics.StreamingChainStats(2, 10_000, max_lag=32)
+        x = self._ar1(n=10_000, chains=2, seed=2)
+        for s in range(0, 10_000, 256):
+            acc.update(x[s : s + 256])
+        assert acc._tail.shape[0] <= 32
+        assert acc._head.shape[0] <= 32
+        assert acc._cross.shape == (33, 2)
+        assert np.isfinite(acc.summarize()["tau"])
+
+    def test_constant_chains_degenerate_but_defined(self):
+        z = np.ones((100, 3))
+        out = diagnostics.summarize_stream([z[:60], z[60:]], 3, 100)
+        assert out["split_rhat"] == 1.0
+        assert np.isfinite(out["tau"])
+
+    def test_window_capped_flag(self):
+        """A mixing time beyond max_lag is reported, not silently wrong."""
+        x = np.repeat(np.random.default_rng(3).normal(size=50), 40)[:, None]
+        out = diagnostics.summarize_stream([x], 1, x.shape[0], max_lag=8)
+        assert out.get("window_capped") is True
+
+    def test_stream_overflow_and_incomplete_rejected(self):
+        acc = diagnostics.StreamingChainStats(1, 10)
+        acc.update(np.zeros((6, 1)))
+        with pytest.raises(ValueError, match="overflow"):
+            acc.update(np.zeros((5, 1)))
+        with pytest.raises(ValueError, match="incomplete"):
+            acc.summarize()
+        with pytest.raises(ValueError, match="chunk must be"):
+            acc.update(np.zeros((2, 3)))
+
+
 class TestSummarize:
     def test_bundle_keys_and_acceptance(self):
         x = np.random.default_rng(7).normal(size=(500, 3))

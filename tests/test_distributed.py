@@ -1,7 +1,6 @@
 """Multi-device distributed tests: run in subprocesses with fake devices
 (the main pytest process keeps 1 CPU device)."""
 
-import json
 import os
 import subprocess
 import sys
