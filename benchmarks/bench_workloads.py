@@ -93,7 +93,9 @@ def bench_workload(
         "wall_s": round(wall_s, 3),
         "site_steps_per_s": round(site_steps / max(wall_s, 1e-9), 1),
         "calib_steps_per_s": round(machine_calibration(), 1),
-        "acceptance": diag["acceptance_rate"],
+        # gibbs diagnostics label the engine rate as a flip count
+        # (DESIGN.md §2); the bench schema keeps one column for both
+        "acceptance": diag.get("acceptance_rate", diag.get("flip_rate")),
         "tau": diag["tau"],
         "ess": diag["ess"],
         "split_rhat": diag["split_rhat"],

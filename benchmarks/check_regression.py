@@ -27,12 +27,22 @@ MEASURED_FIELDS = frozenset({
     "site_steps_per_s",
     "calib_steps_per_s",
     "acceptance",
+    "flip_rate",
     "tau",
     "ess",
     "split_rhat",
     "macro_energy_uj",
     "ess_per_joule",
     "window_capped",
+    # tempering table (benchmarks/bench_tempering.py)
+    "swap_accept_rate",
+    "swap_rate_min",
+    "swap_rate_max",
+    "round_trips",
+    "ground_energy",
+    "best_energy",
+    "steps_to_ground",
+    "time_to_ground_s",
 })
 
 THROUGHPUT_FIELD = "site_steps_per_s"

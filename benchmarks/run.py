@@ -40,6 +40,7 @@ MODULES = [
     ("gray_ablation", "benchmarks.bench_gray_ablation"),
     ("workloads", "benchmarks.bench_workloads"),
     ("chain_scaling", "benchmarks.bench_chain_scaling"),
+    ("tempering", "benchmarks.bench_tempering"),
 ]
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

@@ -1,7 +1,8 @@
 # Chain diagnostics (DESIGN.md §Workloads): acceptance/flip rate comes
 # from the engine itself; this package judges the *samples* — integrated
 # autocorrelation time, effective sample size, and split-R-hat over a
-# scalar statistic of the chain.
+# scalar statistic of the chain — and, for tempered runs, the replica-
+# exchange health (per-pair swap acceptance, walker round trips).
 
 from repro.diagnostics.chain_stats import (  # noqa: F401
     autocorrelation,
@@ -14,3 +15,4 @@ from repro.diagnostics.streaming import (  # noqa: F401
     StreamingChainStats,
     summarize_stream,
 )
+from repro.diagnostics.swap_stats import SwapStats  # noqa: F401

@@ -35,13 +35,15 @@ from jax.experimental import pallas as pl
 def _gibbs_kernel(
     init_ref,     # (1, H, W) uint32 {0,1} spins
     u_ref,        # (K, 1, H, W) float32
-    samples_ref,  # (K, 1, H, W) uint32  out
-    flips_ref,    # (1, H, W) int32      out
-    *,
+    *rest,        # n_consts broadcast model refs, then the two outputs:
+                  #   samples (K, 1, H, W) uint32, flips (1, H, W) int32
     logit_fn,
     n_steps: int,
     parity0: int,
+    n_consts: int,
 ):
+    const_refs, (samples_ref, flips_ref) = rest[:n_consts], rest[n_consts:]
+    consts = tuple(ref[...] for ref in const_refs)
     state0 = init_ref[0]
     h, w = state0.shape
     row = jax.lax.broadcasted_iota(jnp.int32, (h, w), 0)
@@ -51,9 +53,9 @@ def _gibbs_kernel(
     def body(k, carry):
         state, nflips = carry
         parity = (parity0 + k) % 2
-        new = (u_ref[k, 0] < jax.nn.sigmoid(logit_fn(state))).astype(
-            jnp.uint32
-        )
+        new = (
+            u_ref[k, 0] < jax.nn.sigmoid(logit_fn(state, *consts))
+        ).astype(jnp.uint32)
         nxt = jnp.where(checker == parity, new, state)
         samples_ref[k, 0] = nxt
         return nxt, nflips + (nxt != state).astype(jnp.int32)
@@ -70,14 +72,20 @@ def _gibbs_kernel(
 def gibbs_chain_pallas(
     init: jnp.ndarray,  # (B, H, W) uint32 {0,1} spins
     u: jnp.ndarray,     # (K, B, H, W) float32
-    logit_fn,           # (H, W) state -> (H, W) conditional logit of s=1
+    logit_fn,           # (H, W) state [, *consts] -> (H, W) logit of s=1
     parity0: int = 0,
     interpret: bool = True,
+    consts: tuple = (),
 ):
     """Fused K-half-sweep checkerboard Gibbs over B independent lattices.
 
     ``logit_fn`` must be hashable (it rides a jit static argument) — a
-    bound method of a frozen model dataclass qualifies.
+    bound method of a frozen model dataclass qualifies.  Models whose
+    conditional closes over *array* parameters (e.g. spin-glass bond
+    couplings) cannot capture them in the kernel trace; they arrive as
+    ``consts`` operands instead, broadcast to every grid step, and
+    ``logit_fn(state, *consts)`` threads them back into the one shared
+    conditional implementation (DESIGN.md §Tempering).
     """
     b, h, w = init.shape
     k_steps = u.shape[0]
@@ -90,13 +98,19 @@ def gibbs_chain_pallas(
         logit_fn=logit_fn,
         n_steps=k_steps,
         parity0=parity0,
+        n_consts=len(consts),
     )
+    const_specs = [
+        pl.BlockSpec(c.shape, functools.partial(lambda nd, i: (0,) * nd, c.ndim))
+        for c in consts
+    ]
     samples, flips = pl.pallas_call(
         kernel,
         grid=(b,),
         in_specs=[
             pl.BlockSpec((1, h, w), lambda i: (i, 0, 0)),
             pl.BlockSpec((k_steps, 1, h, w), lambda i: (0, i, 0, 0)),
+            *const_specs,
         ],
         out_specs=[
             pl.BlockSpec((k_steps, 1, h, w), lambda i: (0, i, 0, 0)),
@@ -107,5 +121,5 @@ def gibbs_chain_pallas(
             jax.ShapeDtypeStruct((b, h, w), jnp.int32),
         ],
         interpret=interpret,
-    )(init.astype(jnp.uint32), u)
+    )(init.astype(jnp.uint32), u, *consts)
     return samples, flips

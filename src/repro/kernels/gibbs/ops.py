@@ -19,7 +19,7 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def gibbs_sweep(init, u, logit_fn, parity0: int = 0):
+def gibbs_sweep(init, u, logit_fn, parity0: int = 0, consts: tuple = ()):
     """Run K fused checkerboard half-sweeps from ``init`` (B, H, W).
 
     ``logit_fn`` is the model's per-site conditional logit (e.g.
@@ -27,8 +27,11 @@ def gibbs_sweep(init, u, logit_fn, parity0: int = 0):
     executor steps, traced into the kernel.  ``u`` is the (K, B, H, W)
     accurate-[0,1] uniform stream (one draw per site per half-sweep —
     inactive-colour draws are discarded, matching the scan executor so
-    the streams stay aligned).  Returns (samples (K, B, H, W) uint32,
-    flip_count (B, H, W) int32).
+    the streams stay aligned).  ``consts`` carries a model's array
+    parameters (spin-glass couplings) as kernel operands —
+    ``logit_fn(state, *consts)`` — since the kernel trace cannot capture
+    array closures.  Returns (samples (K, B, H, W) uint32, flip_count
+    (B, H, W) int32).
     """
     return gibbs_chain_pallas(
         init,
@@ -36,4 +39,5 @@ def gibbs_sweep(init, u, logit_fn, parity0: int = 0):
         logit_fn,
         parity0=int(parity0),
         interpret=not _on_tpu(),
+        consts=tuple(consts),
     )

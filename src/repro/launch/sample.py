@@ -1,11 +1,12 @@
 """Run a workload from the probabilistic-model zoo and report diagnostics.
 
-The non-LLM face of the sampler engine: pick a workload (2-D Ising/MRF
-via checkerboard Gibbs, GMM posterior via MH), a randomness backend
-(ideal host vs the paper's CIM pipeline), and an execution substrate
-(scan vs the fused Pallas kernel), run the chains, and print throughput
-plus chain diagnostics (flip/acceptance rate, integrated autocorrelation
-time, ESS, split-R-hat).
+The non-LLM face of the sampler engine: pick a workload from the
+registry (2-D Ising/MRF via checkerboard Gibbs, GMM posterior via MH,
+±J spin glass), a randomness backend (ideal host vs the paper's CIM
+pipeline), and an execution substrate (scan vs the fused Pallas kernel),
+run the chains, and print throughput plus chain diagnostics
+(flip/acceptance rate, integrated autocorrelation time, ESS,
+split-R-hat).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.sample --workload ising --smoke \
@@ -15,26 +16,41 @@ Usage:
   PYTHONPATH=src python -m repro.launch.sample --workload ising \
       --num-chains 8 --backend pallas
 
-All combinations of --randomness {host,cim} x --backend {scan,pallas}
-run on CPU (pallas in interpret mode); scan and pallas produce
-bit-identical sample streams under the same seed (tests/test_workloads).
+Workload choices and their knobs come straight from the
+``workloads.WORKLOADS`` registry (flags a builder doesn't accept are
+simply not forwarded), so a newly registered workload appears here with
+no CLI change.
 
 ``--num-chains C`` runs C independent chains in one device program
-(DESIGN.md §Chains-axis): per-chain randomness and inits are
-counter-derived, so chain 0 is bit-identical to a ``--num-chains 1``
-run, and cross-chain ESS / split-R-hat are streamed in O(chunk) memory.
-With more than one device visible, the chain axis shards over a 1-D
-device mesh via shard_map (bit-identical to the unsharded run).
+(DESIGN.md §Chains-axis); with more than one device visible the chain
+axis shards over a 1-D mesh via shard_map (bit-identical to unsharded).
+
+Tempering (DESIGN.md §Tempering) wraps the same workload target:
+
+  # parallel tempering: 8 replicas, geometric ladder down to beta 0.25
+  PYTHONPATH=src python -m repro.launch.sample --workload spin_glass \
+      --smoke --ladder 8 --beta-min 0.25 --swap-every 16
+
+  # simulated annealing to a ground state / MAX-CUT
+  PYTHONPATH=src python -m repro.launch.sample --workload spin_glass \
+      --smoke --anneal 8 --beta-min 0.4 --beta-max 4.0
+
+Both print swap/round-trip diagnostics (ladder) or the best-ever energy
+(anneal) next to the cold-chain sample diagnostics; tempered streams are
+bit-identical across {scan, pallas} x chunkings (tests/test_tempering).
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
 import time
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
-from repro import workloads
+from repro import diagnostics, tempering, workloads
 from repro.core import energy
 
 
@@ -59,36 +75,64 @@ def build_parser() -> argparse.ArgumentParser:
         help="independent chains run in one device program",
     )
     p.add_argument("--seed", type=int, default=0)
-    # ising knobs
-    p.add_argument("--height", type=int, default=None, help="ising lattice H")
-    p.add_argument("--width", type=int, default=None, help="ising lattice W")
-    p.add_argument("--batch", type=int, default=None, help="ising lattices")
+    # lattice knobs (ising / spin_glass)
+    p.add_argument("--height", type=int, default=None, help="lattice H")
+    p.add_argument("--width", type=int, default=None, help="lattice W")
+    p.add_argument("--batch", type=int, default=None, help="lattices")
     p.add_argument("--beta", type=float, default=None, help="ising coupling")
-    p.add_argument("--field", type=float, default=0.0, help="ising ext. field")
+    p.add_argument("--field", type=float, default=0.0, help="external field")
+    p.add_argument(
+        "--maxcut", action="store_true",
+        help="spin_glass: signed MAX-CUT couplings (J = -w); tempered "
+        "rows then report best_cut",
+    )
     # gmm knobs
     p.add_argument("--nbits", type=int, default=None, help="gmm grid bits")
     p.add_argument("--chains", type=int, default=None, help="gmm chains")
+    # tempering (repro/tempering, DESIGN.md §Tempering)
+    p.add_argument(
+        "--ladder", type=int, default=0, metavar="R",
+        help="parallel tempering with R replicas on a geometric ladder",
+    )
+    p.add_argument(
+        "--swap-every", type=int, default=16,
+        help="replica-exchange period in engine steps",
+    )
+    p.add_argument(
+        "--anneal", type=int, default=0, metavar="S",
+        help="simulated annealing over S geometric cooling stages",
+    )
+    p.add_argument(
+        "--beta-min", type=float, default=0.25,
+        help="hottest ladder beta / annealing start beta",
+    )
+    p.add_argument(
+        "--beta-max", type=float, default=4.0,
+        help="annealing end beta (annealing only; ladders end at 1.0)",
+    )
     return p
 
 
 def _workload_kwargs(args) -> dict:
-    common = dict(
+    """Forward exactly the flags the registered builder accepts — the
+    registry, not this module, decides a workload's knobs."""
+    candidates = dict(
         randomness=args.randomness,
         backend=args.backend,
         smoke=args.smoke,
         n_steps=args.steps,
         num_chains=args.num_chains,
+        height=args.height,
+        width=args.width,
+        batch=args.batch,
+        beta=args.beta,
+        field=args.field,
+        maxcut=args.maxcut,
+        nbits=args.nbits,
+        chains=args.chains,
     )
-    if args.workload == "ising":
-        return dict(
-            common,
-            height=args.height,
-            width=args.width,
-            batch=args.batch,
-            beta=args.beta,
-            field=args.field,
-        )
-    return dict(common, nbits=args.nbits, chains=args.chains)
+    params = inspect.signature(workloads.WORKLOADS[args.workload]).parameters
+    return {k: v for k, v in candidates.items() if k in params}
 
 
 def _chains_mesh(num_chains: int):
@@ -100,18 +144,129 @@ def _chains_mesh(num_chains: int):
     n_dev = jax.device_count()
     if num_chains < 2 or n_dev < 2:
         return None
-    import numpy as np
-
     return jax.sharding.Mesh(np.asarray(jax.devices()), ("data",))
 
 
+def _rate_key(wl) -> str:
+    """Gibbs has no reject: the engine's accept_count is a flip count
+    (DESIGN.md §2), and the user-facing label says so."""
+    return "flip_rate" if wl.engine.config.update == "gibbs" else (
+        "acceptance_rate"
+    )
+
+
+def _series_diagnostics(wl, samples) -> dict:
+    """Post-burn-in diagnostics of the workload statistic over one
+    (solo-shaped) sample block."""
+    series = np.asarray(wl.series_fn(samples))
+    series = series.reshape(series.shape[0], -1)
+    return diagnostics.summarize(series[wl.burn_in:])
+
+
+def _run_ladder(args, wl, k_run) -> dict:
+    ladder = tempering.Ladder.geometric(args.ladder, beta_min=args.beta_min)
+    rex = tempering.ReplicaExchange(
+        ladder=ladder, engine=wl.engine, swap_every=args.swap_every
+    )
+    init = jnp.broadcast_to(
+        wl.init_words, (ladder.num_replicas, *wl.init_words.shape)
+    )
+    t0 = time.time()
+    result = rex.run(k_run, wl.target, wl.n_steps, init)
+    jax.block_until_ready(result.samples)
+    wall_s = time.time() - t0
+
+    site_steps = wl.n_steps * int(init.size)
+    diag = _series_diagnostics(wl, result.cold_samples)
+    row = {
+        "mode": "ladder",
+        "num_replicas": ladder.num_replicas,
+        "swap_every": args.swap_every,
+        "beta_min": round(min(ladder.betas), 4),
+        "n_steps": wl.n_steps,
+        "wall_s": round(wall_s, 3),
+        "site_steps_per_s": round(site_steps / max(wall_s, 1e-9), 1),
+        _rate_key(wl): round(float(result.acceptance_rate), 4),
+        **result.swap.summary(),
+        # sample quality of the cold (beta = betas[0]) replica; its
+        # post-burn-in step count is kept_steps, as in the plain rows
+        **{
+            ("kept_steps" if k == "n_steps" else k): v
+            for k, v in diag.items()
+        },
+    }
+    if getattr(wl.target, "maxcut_reduction", False):
+        # best cut the target-measure replica ever visited
+        row["best_cut"] = round(
+            float(np.asarray(wl.target.cut_value(result.cold_samples)).max()),
+            4,
+        )
+    return row
+
+
+def _run_anneal(args, wl, k_run) -> dict:
+    annealer = tempering.Annealer.geometric(
+        args.anneal,
+        max(1, wl.n_steps // args.anneal),
+        beta_min=args.beta_min,
+        beta_max=args.beta_max,
+    )
+    t0 = time.time()
+    result = annealer.run(k_run, wl.target, wl.init_words, engine=wl.engine)
+    jax.block_until_ready(result.best_words)
+    wall_s = time.time() - t0
+
+    site_steps = result.n_steps * int(wl.init_words.size)
+    best_logp = np.asarray(result.best_logp)
+    row = {
+        "mode": "anneal",
+        "stages": args.anneal,
+        "beta_min": round(min(annealer.betas), 4),
+        "beta_max": round(max(annealer.betas), 4),
+        "n_steps": result.n_steps,
+        "wall_s": round(wall_s, 3),
+        "site_steps_per_s": round(site_steps / max(wall_s, 1e-9), 1),
+        _rate_key(wl): round(float(result.acceptance_rate), 4),
+        # lattice targets: best_logp is -energy, report the best energy
+        "best_energy": round(float(-best_logp.max()), 4),
+    }
+    if getattr(wl.target, "maxcut_reduction", False):
+        row["best_cut"] = round(
+            float(np.asarray(wl.target.cut_value(result.best_words)).max()), 4
+        )
+    return row
+
+
 def main(argv=None) -> dict:
-    args = build_parser().parse_args(argv)
+    parser = build_parser()
+    args = parser.parse_args(argv)
+    if args.ladder and args.anneal:
+        parser.error("--ladder and --anneal are mutually exclusive")
+    if (args.ladder or args.anneal) and args.num_chains > 1:
+        parser.error(
+            "--ladder/--anneal occupy the engine's chain-id axis; batch "
+            "the workload (e.g. --batch/--chains) for parallel ensembles"
+        )
     key = jax.random.PRNGKey(args.seed)
     k_init, k_run = jax.random.split(key)
     wl = workloads.build(args.workload, k_init, **_workload_kwargs(args))
-    mesh = _chains_mesh(args.num_chains)
 
+    base = {
+        "workload": wl.name,
+        "update": wl.engine.config.update,
+        "randomness": args.randomness,
+        "backend": args.backend,
+    }
+    if args.ladder:
+        row = {**base, **_run_ladder(args, wl, k_run)}
+        print("  ".join(f"{k}={v}" for k, v in row.items()))
+        return row
+    if args.anneal:
+        row = {**base, **_run_anneal(args, wl, k_run)}
+        print("  ".join(f"{k}={v}" for k, v in row.items()))
+        return row
+
+    mesh = _chains_mesh(args.num_chains)
     t0 = time.time()
     result = wl.run(k_run, mesh=mesh)
     jax.block_until_ready(result.samples)
@@ -126,10 +281,7 @@ def main(argv=None) -> dict:
     ) * site_steps
 
     row = {
-        "workload": wl.name,
-        "update": wl.engine.config.update,
-        "randomness": args.randomness,
-        "backend": args.backend,
+        **base,
         "n_steps": wl.n_steps,
         "burn_in": wl.burn_in,
         "n_sites": n_sites,

@@ -25,8 +25,10 @@ operands and mirror each other op-for-op, so with the same key they
 produce bit-identical sample streams (asserted in
 tests/test_sampler_engine.py and tests/test_workloads.py).  Randomness
 streams in chunks of ``chunk_steps`` — operands for step ``t`` depend
-only on ``(key, t)`` — so chains of any length run in O(chunk) operand
-memory.
+only on ``(key, step0 + t)`` — so chains of any length run in O(chunk)
+operand memory, and a run resumed at ``step0 = s`` continues the exact
+stream a longer run would have produced (the segment-invariance the
+tempering subsystem builds on, DESIGN.md §Tempering).
 """
 
 from __future__ import annotations
@@ -171,7 +173,7 @@ def _scan_span(target, nbits, carry, flips, u):
     return jax.lax.scan(body, carry, (flips, u))
 
 
-def _run_scan(key, target, backend, nbits, n_steps, chunk, init_words):
+def _run_scan(key, target, backend, nbits, n_steps, chunk, step0, init_words):
     shape = init_words.shape
     carry = (
         init_words.astype(jnp.uint32),
@@ -187,11 +189,11 @@ def _run_scan(key, target, backend, nbits, n_steps, chunk, init_words):
             flips, u = backend.chunk(key, start, chunk, shape, nbits)
             return _scan_span(target, nbits, c, flips, u)
 
-        starts = jnp.arange(n_full, dtype=jnp.int32) * chunk
+        starts = step0 + jnp.arange(n_full, dtype=jnp.int32) * chunk
         carry, stacked = jax.lax.scan(outer, carry, starts)
         pieces.append(stacked.reshape(n_full * chunk, *shape))
     if rem:
-        flips, u = backend.chunk(key, n_full * chunk, rem, shape, nbits)
+        flips, u = backend.chunk(key, step0 + n_full * chunk, rem, shape, nbits)
         carry, tail = _scan_span(target, nbits, carry, flips, u)
         pieces.append(tail)
     samples = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, 0)
@@ -199,19 +201,37 @@ def _run_scan(key, target, backend, nbits, n_steps, chunk, init_words):
     return samples, acc, words, logp
 
 
-def _run_pallas(key, target, backend, nbits, n_steps, chunk, block_c, init_words):
+def _concrete_step0(step0) -> int:
+    """Pallas executors chunk with a python loop and bake the Gibbs
+    checkerboard parity into the kernel as a static argument, so the
+    stream offset must be a concrete int (scan executors take traced
+    offsets)."""
+    try:
+        return int(step0)
+    except TypeError as e:
+        raise ValueError(
+            "pallas execution needs a concrete (python int) step0 — the "
+            "chunk schedule and checkerboard parity are compile-time "
+            "static; use execution='scan' for traced stream offsets"
+        ) from e
+
+
+def _run_pallas(
+    key, target, backend, nbits, n_steps, chunk, step0, block_c, init_words
+):
     from repro.kernels.mh import ops as mh_ops  # avoid import cycle
 
     if init_words.ndim != 2:
         raise ValueError(
             f"pallas execution expects (B, C) chain state, got {init_words.shape}"
         )
+    step0 = _concrete_step0(step0)
     state = init_words.astype(jnp.uint32)
     acc = jnp.zeros(state.shape, jnp.int32)
     pieces = []
     for start in range(0, n_steps, chunk):
         n = min(chunk, n_steps - start)
-        flips, u = backend.chunk(key, start, n, state.shape, nbits)
+        flips, u = backend.chunk(key, step0 + start, n, state.shape, nbits)
         samples, a = mh_ops.mh_sample(
             target.table, state, flips, u, nbits=nbits, block_c=block_c
         )
@@ -251,7 +271,7 @@ def _gibbs_span(target, carry, u, idx):
     return jax.lax.scan(body, carry, (u, idx))
 
 
-def _run_scan_gibbs(key, target, backend, n_steps, chunk, init_words):
+def _run_scan_gibbs(key, target, backend, n_steps, chunk, step0, init_words):
     shape = init_words.shape
     carry = (init_words.astype(jnp.uint32), jnp.zeros(shape, jnp.int32))
     chunk = max(1, min(chunk, n_steps))
@@ -264,11 +284,11 @@ def _run_scan_gibbs(key, target, backend, n_steps, chunk, init_words):
             idx = start + jnp.arange(chunk, dtype=jnp.int32)
             return _gibbs_span(target, c, u, idx)
 
-        starts = jnp.arange(n_full, dtype=jnp.int32) * chunk
+        starts = step0 + jnp.arange(n_full, dtype=jnp.int32) * chunk
         carry, stacked = jax.lax.scan(outer, carry, starts)
         pieces.append(stacked.reshape(n_full * chunk, *shape))
     if rem:
-        start = n_full * chunk
+        start = step0 + n_full * chunk
         _, u = backend.chunk(key, start, rem, shape, 1)
         idx = start + jnp.arange(rem, dtype=jnp.int32)
         carry, tail = _gibbs_span(target, carry, u, idx)
@@ -278,7 +298,7 @@ def _run_scan_gibbs(key, target, backend, n_steps, chunk, init_words):
     return samples, acc, state
 
 
-def _run_pallas_gibbs(key, target, backend, n_steps, chunk, init_words):
+def _run_pallas_gibbs(key, target, backend, n_steps, chunk, step0, init_words):
     from repro.kernels.gibbs import ops as gibbs_ops  # avoid import cycle
 
     if init_words.ndim != 3:
@@ -286,15 +306,17 @@ def _run_pallas_gibbs(key, target, backend, n_steps, chunk, init_words):
             f"pallas Gibbs expects (B, H, W) lattice state, got "
             f"{init_words.shape}"
         )
+    step0 = _concrete_step0(step0)
     state = init_words.astype(jnp.uint32)
     acc = jnp.zeros(state.shape, jnp.int32)
     pieces = []
+    logit_fn, consts = _fused_gibbs_logit(target)
     chunk = max(1, min(chunk, n_steps))
     for start in range(0, n_steps, chunk):
         n = min(chunk, n_steps - start)
-        _, u = backend.chunk(key, start, n, state.shape, 1)
+        _, u = backend.chunk(key, step0 + start, n, state.shape, 1)
         samples, flips = gibbs_ops.gibbs_sweep(
-            state, u, target.conditional_logit, parity0=start % 2
+            state, u, logit_fn, parity0=(step0 + start) % 2, consts=consts
         )
         state = samples[-1]
         acc = acc + flips
@@ -323,7 +345,7 @@ def _chains_fold_mh(x):
 
 
 def _run_pallas_chains(
-    keys, target, backend, nbits, n_steps, chunk, block_c, init
+    keys, target, backend, nbits, n_steps, chunk, step0, block_c, init
 ):
     """Fused MH over C chains: one batched-grid kernel program per chunk."""
     from repro.kernels.mh import ops as mh_ops  # avoid import cycle
@@ -333,6 +355,7 @@ def _run_pallas_chains(
             f"multi-chain pallas execution expects (num_chains, B, C) chain "
             f"state, got {init.shape}"
         )
+    step0 = _concrete_step0(step0)
     c_chains, b, cc = init.shape
     state = jnp.transpose(init.astype(jnp.uint32), (1, 0, 2)).reshape(
         b, c_chains * cc
@@ -343,7 +366,7 @@ def _run_pallas_chains(
     for start in range(0, n_steps, chunk):
         n = min(chunk, n_steps - start)
         flips, u = jax.vmap(
-            lambda k: backend.chunk(k, start, n, (b, cc), nbits)
+            lambda k: backend.chunk(k, step0 + start, n, (b, cc), nbits)
         )(keys)
         samples, a = mh_ops.mh_sample(
             target.table, state, _chains_fold_mh(flips), _chains_fold_mh(u),
@@ -363,7 +386,18 @@ def _run_pallas_chains(
     return unfold(samples), unfold(acc), unfold(state), unfold(logp)
 
 
-def _run_pallas_gibbs_chains(keys, target, backend, n_steps, chunk, init):
+def _fused_gibbs_logit(target):
+    """(logit_fn, consts) for the fused kernel: models whose conditional
+    closes over array parameters expose them as ``fused_consts`` plus a
+    ``fused_logit(state, *consts)`` sharing the scan-side math body —
+    kernel traces cannot capture array closures (DESIGN.md §Tempering)."""
+    consts = tuple(getattr(target, "fused_consts", ()) or ())
+    if consts:
+        return target.fused_logit, consts
+    return target.conditional_logit, ()
+
+
+def _run_pallas_gibbs_chains(keys, target, backend, n_steps, chunk, step0, init):
     """Fused checkerboard Gibbs over C chains: chains fold into the
     lattice-batch grid axis."""
     from repro.kernels.gibbs import ops as gibbs_ops  # avoid import cycle
@@ -373,6 +407,8 @@ def _run_pallas_gibbs_chains(keys, target, backend, n_steps, chunk, init):
             f"multi-chain pallas Gibbs expects (num_chains, B, H, W) lattice "
             f"state, got {init.shape}"
         )
+    step0 = _concrete_step0(step0)
+    logit_fn, consts = _fused_gibbs_logit(target)
     c_chains, b, h, w = init.shape
     state = init.astype(jnp.uint32).reshape(c_chains * b, h, w)
     acc = jnp.zeros(state.shape, jnp.int32)
@@ -381,13 +417,14 @@ def _run_pallas_gibbs_chains(keys, target, backend, n_steps, chunk, init):
     for start in range(0, n_steps, chunk):
         n = min(chunk, n_steps - start)
         u = jax.vmap(
-            lambda k: backend.chunk(k, start, n, (b, h, w), 1)[1]
+            lambda k: backend.chunk(k, step0 + start, n, (b, h, w), 1)[1]
         )(keys)
         u_fold = jnp.transpose(u, (1, 0, 2, 3, 4)).reshape(
             n, c_chains * b, h, w
         )
         samples, flips = gibbs_ops.gibbs_sweep(
-            state, u_fold, target.conditional_logit, parity0=start % 2
+            state, u_fold, logit_fn, parity0=(step0 + start) % 2,
+            consts=consts,
         )
         state = samples[-1]
         acc = acc + flips
@@ -450,10 +487,20 @@ class MHEngine:
 
     def run(
         self, key, target, n_steps: int, init_words, *,
-        chain_id: int = 0, mesh=None,
+        chain_id: int = 0, mesh=None, step0=0,
     ) -> EngineResult:
         """Run ``n_steps`` of the configured update rule from
         ``init_words``; collect every state.
+
+        ``step0`` offsets the randomness stream (and the Gibbs
+        checkerboard parity) by an absolute step count: operands for
+        step ``t`` of this run are those of absolute step ``step0 + t``,
+        so a run resumed from ``(final_words, step0=s)`` continues the
+        exact stream of one unsegmented run — the segment-invariance the
+        tempering subsystem's swap boundaries rely on (DESIGN.md
+        §Tempering).  Scan execution accepts a traced ``step0``; the
+        pallas executors need a concrete int (their chunk schedule and
+        Gibbs parity are compile-time static).
 
         ``mh``: ``init_words`` is (B, C) for table targets (B independent
         targets x C lock-step chains), any shape for callable targets.
@@ -480,16 +527,19 @@ class MHEngine:
         """
         if n_steps < 1:
             raise ValueError(f"n_steps must be >= 1, got {n_steps}")
+        if isinstance(step0, int) and step0 < 0:
+            raise ValueError(f"step0 must be >= 0, got {step0}")
         if self.config.num_chains > 1:
             return self._run_chains(
-                key, target, n_steps, init_words, mesh, base=chain_id
+                key, target, n_steps, init_words, mesh, base=chain_id,
+                step0=step0,
             )
         key = chain_key(key, chain_id)
         if self.config.update == "gibbs":
-            return self._run_gibbs(key, target, n_steps, init_words)
+            return self._run_gibbs(key, target, n_steps, init_words, step0)
         execution = resolve_execution(self.config.execution, target)
         args = (key, target, self._backend, target.nbits, n_steps,
-                self.config.chunk_steps)
+                self.config.chunk_steps, step0)
         if execution == "scan":
             samples, acc, words, logp = _run_scan(*args, init_words)
         else:
@@ -506,7 +556,9 @@ class MHEngine:
             n_steps=jnp.int32(n_steps),
         )
 
-    def _run_gibbs(self, key, target, n_steps: int, init_words) -> EngineResult:
+    def _run_gibbs(
+        self, key, target, n_steps: int, init_words, step0=0
+    ) -> EngineResult:
         if not hasattr(target, "conditional_logit"):
             raise ValueError(
                 "gibbs update needs a conditional target exposing "
@@ -514,7 +566,8 @@ class MHEngine:
                 f"IsingModel); got {type(target).__name__}"
             )
         execution = resolve_execution(self.config.execution, target, "gibbs")
-        args = (key, target, self._backend, n_steps, self.config.chunk_steps)
+        args = (key, target, self._backend, n_steps, self.config.chunk_steps,
+                step0)
         if execution == "scan":
             samples, acc, words = _run_scan_gibbs(*args, init_words)
         else:
@@ -534,7 +587,8 @@ class MHEngine:
         )
 
     def _run_chains(
-        self, key, target, n_steps: int, init_words, mesh, base: int = 0
+        self, key, target, n_steps: int, init_words, mesh, base: int = 0,
+        step0=0,
     ):
         """C independent chains in one device program (optionally sharded).
 
@@ -570,7 +624,7 @@ class MHEngine:
                     return jax.vmap(
                         lambda k, w: _run_scan_gibbs(
                             k, target, self._backend, n_steps,
-                            cfg.chunk_steps, w,
+                            cfg.chunk_steps, step0, w,
                         )
                     )(ks, ini)
             else:
@@ -578,7 +632,7 @@ class MHEngine:
                 def body(ks, ini):
                     return _run_pallas_gibbs_chains(
                         ks, target, self._backend, n_steps, cfg.chunk_steps,
-                        ini,
+                        step0, ini,
                     )
 
             body = _shard_over_chains(body, mesh, num_chains, 3)
@@ -598,7 +652,7 @@ class MHEngine:
                     return jax.vmap(
                         lambda k, w: _run_scan(
                             k, target, self._backend, nbits, n_steps,
-                            cfg.chunk_steps, w,
+                            cfg.chunk_steps, step0, w,
                         )
                     )(ks, ini)
             else:
@@ -606,7 +660,7 @@ class MHEngine:
                 def body(ks, ini):
                     return _run_pallas_chains(
                         ks, target, self._backend, nbits, n_steps,
-                        cfg.chunk_steps, cfg.block_c, ini,
+                        cfg.chunk_steps, step0, cfg.block_c, ini,
                     )
 
             body = _shard_over_chains(body, mesh, num_chains, 4)
@@ -651,8 +705,19 @@ class MHEngine:
 SamplerEngine = MHEngine  # the engine outgrew its MH-only name in PR 2
 
 
-@partial(jax.jit, static_argnames=("engine", "target", "n_steps"))
-def run_engine(key, init_words, *, engine: MHEngine, target, n_steps: int):
+@partial(
+    jax.jit,
+    static_argnames=("engine", "target", "n_steps", "chain_id", "step0"),
+)
+def run_engine(
+    key, init_words, *, engine: MHEngine, target, n_steps: int,
+    chain_id: int = 0, step0: int = 0,
+):
     """Jitted engine entry.  ``engine`` and ``target`` are identity-hashed
-    statics — reuse the same instances across calls to reuse the trace."""
-    return engine.run(key, target, n_steps, init_words)
+    statics — reuse the same instances across calls to reuse the trace.
+    ``step0`` is static here (pallas-safe); callers that resume at many
+    offsets should jit ``engine.run`` themselves with a traced offset
+    under scan execution (see tempering/exchange.py)."""
+    return engine.run(
+        key, target, n_steps, init_words, chain_id=chain_id, step0=step0
+    )

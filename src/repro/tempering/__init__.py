@@ -1,0 +1,27 @@
+# Parallel tempering / simulated annealing (DESIGN.md §Tempering) — the
+# algorithm tier above the sampler engine that MC²A and the p-bit
+# coprocessor benchmarks (PAPERS.md) put on probabilistic hardware:
+#
+#   Ladder          beta schedules + per-replica scaled targets (p^beta
+#                   by scaling logits/conditional logits — the engine
+#                   datapath is untouched)
+#   ReplicaExchange even/odd adjacent-pair swaps at absolute-step
+#                   boundaries, uniforms from the run's own
+#                   RandomnessBackend => tempered runs are bit-identical
+#                   across executors/chunkings, and a 1-replica ladder
+#                   degenerates to a plain engine run
+#   Annealer        monotone cooling schedules with a streaming
+#                   best-state tracker (combinatorial optimisation:
+#                   spin-glass ground states, MAX-CUT)
+
+from repro.tempering.anneal import AnnealResult, Annealer  # noqa: F401
+from repro.tempering.exchange import (  # noqa: F401
+    ReplicaExchange,
+    TemperedResult,
+)
+from repro.tempering.ladder import (  # noqa: F401
+    Ladder,
+    TemperedLattice,
+    base_log_prob,
+    scaled_target,
+)

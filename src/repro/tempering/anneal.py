@@ -1,0 +1,168 @@
+"""Simulated annealing on the engine — a monotone beta schedule plus a
+best-state tracker.
+
+Annealing is the 1-replica limit of tempering: one chain samples
+p(x)^beta_k through the engine while beta_k rises stage by stage
+(cooling), turning the sampler into an optimizer — by the end the Gibbs
+conditionals / MH accepts are nearly greedy and the chain settles into
+low-energy states.  The driver reuses the tempering determinism contract
+(DESIGN.md §Tempering): each stage is an engine segment launched with
+``step0 = <absolute step>``, so the full annealed stream is a pure
+function of (key, schedule) — invariant to engine ``chunk_steps`` and
+executor, and a 1-stage schedule at beta = 1 is exactly a plain engine
+run.
+
+The best-state tracker is streaming: per independent chain element it
+keeps only (best words, best beta=1 log-prob) across *every* visited
+state, O(state) memory regardless of ``n_steps`` — combinatorial
+optimisation cares about the best configuration ever touched, not the
+final one.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+from repro.samplers import MHEngine
+from repro.tempering.ladder import base_log_prob, scaled_target
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass
+class AnnealResult:
+    best_words: Array       # (*chain_shape,) best state ever visited
+    best_logp: Array        # (*elem,) its beta=1 log-prob (-energy)
+    final_words: Array      # (*chain_shape,) end-of-schedule state
+    accept_count: Array     # (*chain_shape,) pooled over stages
+    acceptance_rate: Array  # scalar float32
+    n_steps: int
+    betas: tuple[float, ...]
+
+    @property
+    def best_energy(self) -> Array:
+        """Natural-units energy of the best state (lattice targets)."""
+        return -self.best_logp
+
+
+def _stage_best(samples: Array, f: Array):
+    """Per-element argmax of f over a stage's (T, *elem[, *site]) block."""
+    t = f.shape[0]
+    elem_shape = f.shape[1:]
+    site_shape = samples.shape[f.ndim:]
+    flat_f = f.reshape(t, -1)
+    idx = jnp.argmax(flat_f, axis=0)                       # (E,)
+    cols = jnp.arange(flat_f.shape[1])
+    best_f = flat_f[idx, cols].reshape(elem_shape)
+    flat_s = samples.reshape(t, flat_f.shape[1], -1)
+    best_words = flat_s[idx, cols].reshape(*elem_shape, *site_shape)
+    return best_words, best_f
+
+
+@dataclasses.dataclass(frozen=True)
+class Annealer:
+    """Monotone (non-decreasing) beta schedule, ``steps_per_beta`` engine
+    steps per stage; ``betas[-1]`` is the coldest/greediest stage."""
+
+    betas: tuple[float, ...]
+    steps_per_beta: int
+
+    def __post_init__(self):
+        if len(self.betas) < 1:
+            raise ValueError("annealing schedule needs at least one beta")
+        if self.steps_per_beta < 1:
+            raise ValueError(
+                f"steps_per_beta must be >= 1, got {self.steps_per_beta}"
+            )
+        for b in self.betas:
+            if not (math.isfinite(b) and b > 0.0):
+                raise ValueError(f"betas must be finite and > 0, got {b}")
+        for cur, nxt in zip(self.betas, self.betas[1:]):
+            if nxt < cur:
+                raise ValueError(
+                    "annealing betas must be non-decreasing (cooling), "
+                    f"got {self.betas}"
+                )
+
+    @property
+    def n_steps(self) -> int:
+        return len(self.betas) * self.steps_per_beta
+
+    @classmethod
+    def geometric(
+        cls, num_stages: int, steps_per_beta: int,
+        beta_min: float = 0.25, beta_max: float = 4.0,
+    ) -> "Annealer":
+        if num_stages < 1:
+            raise ValueError(f"num_stages must be >= 1, got {num_stages}")
+        if num_stages == 1:
+            return cls((beta_max,), steps_per_beta)
+        r = (beta_max / beta_min) ** (1.0 / (num_stages - 1))
+        return cls(
+            tuple(beta_min * r**i for i in range(num_stages)), steps_per_beta
+        )
+
+    @classmethod
+    def linear(
+        cls, num_stages: int, steps_per_beta: int,
+        beta_min: float = 0.25, beta_max: float = 4.0,
+    ) -> "Annealer":
+        if num_stages < 1:
+            raise ValueError(f"num_stages must be >= 1, got {num_stages}")
+        if num_stages == 1:
+            return cls((beta_max,), steps_per_beta)
+        step = (beta_max - beta_min) / (num_stages - 1)
+        return cls(
+            tuple(beta_min + step * i for i in range(num_stages)),
+            steps_per_beta,
+        )
+
+    def run(
+        self, key, target, init_words, *, engine: MHEngine, chain_id: int = 0
+    ) -> AnnealResult:
+        """Anneal from ``init_words`` through the schedule; returns the
+        best state ever visited alongside the final one."""
+        if engine.config.num_chains != 1:
+            raise ValueError(
+                "annealing drives a single chain per element; batch the "
+                "target/init instead of "
+                f"num_chains={engine.config.num_chains}"
+            )
+        state = jnp.asarray(init_words)
+        best_words = None
+        best_f = None
+        acc = None
+        step = 0
+        for beta in self.betas:
+            res = engine.run(
+                key, scaled_target(target, beta), self.steps_per_beta,
+                state, chain_id=chain_id, step0=step,
+            )
+            f = base_log_prob(target, res.samples).astype(jnp.float32)
+            stage_words, stage_f = _stage_best(res.samples, f)
+            if best_f is None:
+                best_words, best_f = stage_words, stage_f
+            else:
+                better = stage_f > best_f
+                best_f = jnp.where(better, stage_f, best_f)
+                trail = best_words.ndim - better.ndim
+                best_words = jnp.where(
+                    better.reshape(*better.shape, *([1] * trail)),
+                    stage_words, best_words,
+                )
+            state = res.final_words
+            acc = res.accept_count if acc is None else acc + res.accept_count
+            step += self.steps_per_beta
+        total = jnp.float32(self.n_steps) * jnp.float32(max(1, state.size))
+        return AnnealResult(
+            best_words=best_words,
+            best_logp=best_f,
+            final_words=state,
+            accept_count=acc,
+            acceptance_rate=jnp.sum(acc).astype(jnp.float32) / total,
+            n_steps=self.n_steps,
+            betas=self.betas,
+        )

@@ -1,0 +1,221 @@
+"""Replica exchange (parallel tempering) over the engine's chain-id axis.
+
+R replicas sample p^beta_r through the unified engine; every
+``swap_every`` steps adjacent pairs propose to exchange configurations
+with the standard PT accept test
+
+    u < exp(min((beta_r - beta_{r+1}) · (f(x_{r+1}) - f(x_r)), 0)),
+
+f the beta=1 log-prob per independent chain element — the same accept
+expression as the MH step (DESIGN.md §1), because a swap *is* an MH move
+in replica space.  Even/odd adjacent pairs alternate between swap
+events, so accepted swaps never contend for a replica.
+
+Determinism contract (DESIGN.md §Tempering):
+
+  * replica r's sampling stream is chain slot ``chain_id + r``
+    (``chain_key``) — the chains-axis derivation, so tempered runs
+    inherit every chains-axis parity property;
+  * segments between swap points run with ``step0 = <absolute step>``,
+    so the concatenated per-replica stream is bit-identical to one
+    unsegmented engine run (which is also why a 1-replica ladder — no
+    swaps — reproduces a plain run bit-for-bit);
+  * swap decisions are keyed on the *absolute* step index: the pair
+    parity is ``(step // swap_every - 1) % 2`` and the swap uniforms are
+    drawn from the run's own ``RandomnessBackend`` at that step (a
+    dedicated chain-id slot far outside any replica range), so the whole
+    tempered run is a pure function of (key, config) — invariant to
+    engine ``chunk_steps`` and executor, and host-vs-cim comparisons
+    carry exactly as they do for the within-replica moves.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.diagnostics import SwapStats
+from repro.samplers import MHEngine, chain_key
+from repro.samplers.engine import resolve_execution
+from repro.tempering.ladder import Ladder, base_log_prob
+
+Array = jnp.ndarray
+
+# chain-id slot of the swap-uniform stream: spells "SWAP", far outside
+# any plausible replica range so it never collides with chain_key(·, r)
+SWAP_STREAM_ID = 0x53574150
+
+
+@dataclasses.dataclass
+class TemperedResult:
+    """One replica-exchange run.  Slot-major layout: index r of every
+    field is the replica *slot* holding beta_r throughout the run (swaps
+    exchange configurations between slots, never the betas)."""
+
+    samples: Array          # (R, n_steps, *chain_shape) uint32
+    accept_count: Array     # (R, *chain_shape) int32 within-replica moves
+    acceptance_rate: Array  # scalar float32, pooled over replicas
+    final_words: Array      # (R, *chain_shape) uint32
+    final_logp: Array       # (R, *elem) float32 beta=1 log-prob
+    swap: SwapStats
+    n_steps: int
+    betas: tuple[float, ...]
+
+    @property
+    def cold_samples(self) -> Array:
+        """The beta = betas[0] (target-measure) sample stream."""
+        return self.samples[0]
+
+
+@partial(
+    jax.jit, static_argnames=("engine", "target", "n_steps", "chain_id")
+)
+def _scan_segment(key, init, step0, *, engine, target, n_steps, chain_id):
+    """One replica segment under scan execution, jitted with a *traced*
+    step0 — every segment of a run shares one trace per replica."""
+    return engine.run(
+        key, target, n_steps, init, chain_id=chain_id, step0=step0
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaExchange:
+    """Parallel-tempering driver: ``ladder`` replicas of ``engine``'s
+    update rule with even/odd adjacent swaps every ``swap_every`` steps."""
+
+    ladder: Ladder
+    engine: MHEngine
+    swap_every: int = 16
+
+    def __post_init__(self):
+        if self.swap_every < 1:
+            raise ValueError(
+                f"swap_every must be >= 1, got {self.swap_every}"
+            )
+        if self.engine.config.num_chains != 1:
+            raise ValueError(
+                "replica exchange occupies the chain-id axis (replica r = "
+                "chain slot chain_id + r); run independent tempered "
+                "ensembles by batching the target/init instead of "
+                f"num_chains={self.engine.config.num_chains}"
+            )
+
+    def run(
+        self, key, target, n_steps: int, init_words, *, chain_id: int = 0
+    ) -> TemperedResult:
+        """Run ``n_steps`` per replica from ``init_words`` (leading
+        (num_replicas,) axis, required explicitly like the engine's
+        chains axis) and swap at every interior multiple of
+        ``swap_every``."""
+        if n_steps < 1:
+            raise ValueError(f"n_steps must be >= 1, got {n_steps}")
+        num_replicas = self.ladder.num_replicas
+        init = jnp.asarray(init_words)
+        if init.ndim == 0 or init.shape[0] != num_replicas:
+            raise ValueError(
+                f"tempered init_words must carry a leading "
+                f"(num_replicas={num_replicas},) axis, got {init.shape}; "
+                f"broadcast a shared init with "
+                f"jnp.broadcast_to(init, ({num_replicas}, *init.shape))"
+            )
+        engine = self.engine
+        targets = self.ladder.targets(target)
+        scan_exec = all(
+            resolve_execution(engine.config.execution, t, engine.config.update)
+            == "scan"
+            for t in targets
+        )
+        elem_shape = tuple(base_log_prob(target, init[0]).shape)
+        stats = SwapStats(num_replicas, elem_shape)
+
+        states = [init[r] for r in range(num_replicas)]
+        pieces = [[] for _ in range(num_replicas)]
+        acc = [None] * num_replicas
+        step = 0
+        while step < n_steps:
+            seg = min(self.swap_every, n_steps - step)
+            for r in range(num_replicas):
+                if scan_exec:
+                    res = _scan_segment(
+                        key, states[r], jnp.int32(step), engine=engine,
+                        target=targets[r], n_steps=seg,
+                        chain_id=chain_id + r,
+                    )
+                else:  # pallas: static step0; kernel traces cache on
+                    # (target, parity), not the offset, so eager is fine
+                    res = engine.run(
+                        key, targets[r], seg, states[r],
+                        chain_id=chain_id + r, step0=step,
+                    )
+                states[r] = res.final_words
+                pieces[r].append(res.samples)
+                acc[r] = (
+                    res.accept_count if acc[r] is None
+                    else acc[r] + res.accept_count
+                )
+            step += seg
+            if step < n_steps and num_replicas > 1:
+                states = self._swap(key, target, states, step, stats)
+
+        samples = jnp.stack(
+            [p[0] if len(p) == 1 else jnp.concatenate(p, 0) for p in pieces]
+        )
+        accept_count = jnp.stack(acc)
+        final_words = jnp.stack(states)
+        total = jnp.float32(n_steps) * jnp.float32(max(1, final_words.size))
+        return TemperedResult(
+            samples=samples,
+            accept_count=accept_count,
+            acceptance_rate=(
+                jnp.sum(accept_count).astype(jnp.float32) / total
+            ),
+            final_words=final_words,
+            final_logp=jnp.stack(
+                [base_log_prob(target, s) for s in states]
+            ).astype(jnp.float32),
+            swap=stats,
+            n_steps=n_steps,
+            betas=self.ladder.betas,
+        )
+
+    def _swap(self, key, target, states, abs_step: int, stats: SwapStats):
+        """One even/odd adjacent-pair swap sweep at absolute step
+        ``abs_step`` (a multiple of swap_every)."""
+        num_replicas = len(states)
+        betas = jnp.asarray(self.ladder.betas, jnp.float32)
+        f = jnp.stack(
+            [base_log_prob(target, s) for s in states]
+        ).astype(jnp.float32)                                 # (R, *elem)
+        elem_ndim = f.ndim - 1
+        expand = (slice(None),) + (None,) * elem_ndim
+        delta = (betas[:-1] - betas[1:])[expand] * (f[1:] - f[:-1])
+
+        swap_key = chain_key(key, SWAP_STREAM_ID)
+        _, u = self.engine.randomness.chunk(
+            swap_key, abs_step, 1, (num_replicas - 1, *f.shape[1:]), 1
+        )
+        parity = (abs_step // self.swap_every - 1) % 2
+        active = (jnp.arange(num_replicas - 1) % 2) == parity  # (R-1,)
+        # the MH accept expression (DESIGN.md §1): -inf/-inf pairs give a
+        # NaN delta and both comparisons false — never swap dead states
+        accept = active[expand] & (u[0] < jnp.exp(jnp.minimum(delta, 0.0)))
+
+        stacked = jnp.stack(states)                    # (R, *state_shape)
+        pad = jnp.zeros((1, *accept.shape[1:]), bool)
+        up = jnp.concatenate([accept, pad], 0)         # slot r <- r+1
+        down = jnp.concatenate([pad, accept], 0)       # slot r <- r-1
+        # broadcast the per-element decision over the trailing state dims
+        # (a lattice element is a whole (H, W) configuration)
+        trail = stacked.ndim - 1 - elem_ndim
+        up_b = up.reshape(*up.shape, *([1] * trail))
+        down_b = down.reshape(*down.shape, *([1] * trail))
+        nxt = jnp.concatenate([stacked[1:], stacked[-1:]], 0)
+        prv = jnp.concatenate([stacked[:1], stacked[:-1]], 0)
+        swapped = jnp.where(up_b, nxt, jnp.where(down_b, prv, stacked))
+
+        stats.record(np.asarray(active), np.asarray(accept))
+        return [swapped[r] for r in range(num_replicas)]

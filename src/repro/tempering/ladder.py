@@ -1,0 +1,185 @@
+"""Temperature ladders — the beta axis above the sampler engine.
+
+Tempering never touches the engine datapath (DESIGN.md §Tempering): a
+replica at inverse temperature ``beta`` samples the flattened measure
+p(x)^beta, obtained purely by scaling the target's logits — the table /
+callable log-prob under ``mh``, the conditional logit under ``gibbs``
+(p^beta's single-site conditional logit is exactly beta times the base
+one).  ``Ladder`` owns the beta schedule and builds the per-replica
+scaled targets; the exchange/anneal drivers then run each replica as one
+slot of the engine's chain-id axis, so all four engine axes (and their
+bit-parity contracts) carry over to tempered runs unchanged.
+
+``scaled_target(target, 1.0)`` returns the base target itself —
+degeneration to the untempered engine is by identity, not by an
+algebraic coincidence — which is what makes a 1-replica ladder
+bit-identical to a plain engine run (tests/test_tempering.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax.numpy as jnp
+
+from repro import samplers
+
+
+@dataclasses.dataclass(frozen=True)
+class TemperedLattice:
+    """A conditional lattice model flattened to p^beta.
+
+    ``conditional_logit`` is the only override — beta times the base
+    logit, the exact conditional of the tempered Gibbs measure.  Both
+    executors trace this same bound method (the fused kernel takes it as
+    a static closure), so scan/pallas parity is inherited; everything
+    else (``update_mask``, ``energy``, observables) delegates to the
+    base model.
+    """
+
+    base: object
+    beta: float
+
+    nbits = 1
+    table = None
+
+    def __post_init__(self):
+        if not (math.isfinite(self.beta) and self.beta > 0.0):
+            raise ValueError(f"beta must be finite and > 0, got {self.beta}")
+
+    @property
+    def supports_fused_gibbs(self) -> bool:
+        return getattr(self.base, "supports_fused_gibbs", False)
+
+    def conditional_logit(self, state):
+        return jnp.float32(self.beta) * self.base.conditional_logit(state)
+
+    def fused_logit(self, state, *consts):
+        """Fused-kernel path for bases whose couplings ride as operands
+        (``fused_consts``, delegated via ``__getattr__``)."""
+        return jnp.float32(self.beta) * self.base.fused_logit(state, *consts)
+
+    def __getattr__(self, name):
+        # update_mask / energy / decode / observables pass through
+        if name == "base":  # not yet set (unpickling): avoid recursion
+            raise AttributeError(name)
+        return getattr(self.base, name)
+
+
+class _ScaledTable(samplers.TableTarget):
+    """A log-prob table flattened to p^beta: the scaled table is what both
+    executors consume (VMEM lookup and scan gather read the same rows),
+    and ``decode`` keeps the base's word mapping (e.g. TopKTarget ids)."""
+
+    def __init__(self, base, beta: float):
+        super().__init__(beta * base.table, nbits=base.nbits)
+        self.base = base
+
+    def decode(self, words):
+        return self.base.decode(words)
+
+
+def scaled_target(target, beta: float):
+    """The beta-tempered view of ``target``: samples p^beta.
+
+    ``beta == 1.0`` returns ``target`` itself so untempered replicas
+    share jit trace caches (and bit-identity) with plain engine runs.
+    """
+    beta = float(beta)
+    if not (math.isfinite(beta) and beta > 0.0):
+        raise ValueError(f"beta must be finite and > 0, got {beta}")
+    if beta == 1.0:
+        return target
+    if hasattr(target, "conditional_logit"):
+        return TemperedLattice(target, beta)
+    if getattr(target, "table", None) is not None:
+        return _ScaledTable(target, beta)
+    return samplers.CallableTarget(
+        lambda words: beta * target.log_prob(words), target.nbits
+    )
+
+
+def base_log_prob(target, words):
+    """Joint beta=1 log-prob per *independent chain element* — the swap
+    and best-state statistic.
+
+    Log-prob targets score each word independently, so the element shape
+    is the state shape.  Conditional lattice models have no per-site
+    joint; they must expose ``energy`` (natural units, p ∝ exp(-E), the
+    convention of ``IsingModel.energy``), and the element is the whole
+    lattice — one (H, W) configuration swaps as a unit.
+    """
+    if hasattr(target, "conditional_logit"):
+        energy = getattr(target, "energy", None)
+        if energy is None:
+            raise ValueError(
+                "tempering a lattice model needs a joint ``energy`` method "
+                "(natural units, p ∝ exp(-E)); "
+                f"{type(target).__name__} has none"
+            )
+        return -energy(words)
+    return target.log_prob(words)
+
+
+@dataclasses.dataclass(frozen=True)
+class Ladder:
+    """An inverse-temperature ladder; ``betas[0]`` is the cold/target
+    replica, later entries are progressively flatter (non-increasing)."""
+
+    betas: tuple[float, ...]
+
+    def __post_init__(self):
+        if len(self.betas) < 1:
+            raise ValueError("ladder needs at least one beta")
+        for b in self.betas:
+            if not (math.isfinite(b) and b > 0.0):
+                raise ValueError(f"betas must be finite and > 0, got {b}")
+        for hot, hotter in zip(self.betas, self.betas[1:]):
+            if hotter > hot:
+                raise ValueError(
+                    "ladder betas must be non-increasing (betas[0] is the "
+                    f"cold/target replica), got {self.betas}"
+                )
+
+    @property
+    def num_replicas(self) -> int:
+        return len(self.betas)
+
+    @classmethod
+    def geometric(
+        cls, num_replicas: int, beta_min: float = 0.25, beta_max: float = 1.0
+    ) -> "Ladder":
+        """Geometric spacing — the standard PT default (uniform
+        log-beta gaps give roughly uniform swap rates for energy
+        distributions whose width scales with temperature)."""
+        if num_replicas < 1:
+            raise ValueError(f"num_replicas must be >= 1, got {num_replicas}")
+        if num_replicas == 1:
+            return cls((beta_max,))
+        r = (beta_min / beta_max) ** (1.0 / (num_replicas - 1))
+        return cls(tuple(beta_max * r**i for i in range(num_replicas)))
+
+    @classmethod
+    def linear(
+        cls, num_replicas: int, beta_min: float = 0.25, beta_max: float = 1.0
+    ) -> "Ladder":
+        if num_replicas < 1:
+            raise ValueError(f"num_replicas must be >= 1, got {num_replicas}")
+        if num_replicas == 1:
+            return cls((beta_max,))
+        step = (beta_max - beta_min) / (num_replicas - 1)
+        return cls(tuple(beta_max - step * i for i in range(num_replicas)))
+
+    def targets(self, base_target) -> tuple:
+        """Per-replica scaled targets, cached per (ladder, base) — table
+        and callable wrappers are identity-hashed like their bases, so
+        handing back the *same* instances across runs is what lets the
+        per-segment jit caches hit on a warm second run."""
+        return _cached_targets(self, base_target)
+
+
+@functools.lru_cache(maxsize=64)
+def _cached_targets(ladder: Ladder, base_target) -> tuple:
+    return tuple(scaled_target(base_target, b) for b in ladder.betas)

@@ -25,7 +25,7 @@ from typing import Callable
 import numpy as np
 
 from repro import diagnostics, samplers
-from repro.workloads import gmm, ising
+from repro.workloads import gmm, ising, spin_glass
 
 
 @dataclasses.dataclass
@@ -77,21 +77,31 @@ class WorkloadRun:
         """
         series = self.series(result)[self.burn_in:]
         if self.engine.config.num_chains == 1:
-            return diagnostics.summarize(
+            out = diagnostics.summarize(
                 series, acceptance_rate=float(result.acceptance_rate)
             )
-        chunk = max(1, self.engine.config.chunk_steps)
-        return diagnostics.summarize_stream(
-            (series[s : s + chunk] for s in range(0, series.shape[0], chunk)),
-            num_chains=series.shape[1],
-            total_steps=series.shape[0],
-            acceptance_rate=float(result.acceptance_rate),
-        )
+        else:
+            chunk = max(1, self.engine.config.chunk_steps)
+            out = diagnostics.summarize_stream(
+                (
+                    series[s : s + chunk]
+                    for s in range(0, series.shape[0], chunk)
+                ),
+                num_chains=series.shape[1],
+                total_steps=series.shape[0],
+                acceptance_rate=float(result.acceptance_rate),
+            )
+        if self.engine.config.update == "gibbs":
+            # Gibbs has no reject — the engine's accept_count is a flip
+            # count (DESIGN.md §2), so the user-facing label says so
+            out["flip_rate"] = out.pop("acceptance_rate")
+        return out
 
 
 WORKLOADS = {
     "ising": ising.build,
     "gmm": gmm.build,
+    "spin_glass": spin_glass.build,
 }
 
 

@@ -1,0 +1,356 @@
+"""Tempering subsystem (DESIGN.md §Tempering): parity, degeneration,
+swap correctness, and annealing optimality.
+
+The contract under test:
+
+  * tempered runs are **bit-identical** across {scan, pallas} x
+    {chunked, monolithic} — segments resume via ``step0`` and swap
+    decisions key on absolute step indices, so neither the executor nor
+    the chunk size can change a stream;
+  * a 1-replica ladder degenerates to a plain engine run bit-for-bit
+    (swap boundaries segment the run but cannot perturb it);
+  * swaps are real MH moves: equal-beta pairs always exchange, and on a
+    frustrated spin glass the per-pair acceptance lands strictly inside
+    (0, 1) for both randomness backends;
+  * annealing finds the exhaustively verified ground state.
+
+Sizes stay minimal — tier-1 runs everything, including slow marks.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import samplers, tempering
+from repro.launch import sample as sample_cli
+from repro.workloads.spin_glass import SpinGlass, exhaustive_ground_state
+
+
+def _engine(**kw):
+    return samplers.MHEngine(samplers.EngineConfig(**kw))
+
+
+def _glass(h=4, w=4, batch=2, seed=1):
+    model = SpinGlass.bimodal(jax.random.PRNGKey(seed), h, w)
+    return model, model.random_init(jax.random.PRNGKey(seed + 1), batch)
+
+
+def _mh_target(b=2, v=64, chains=8, seed=0):
+    table = jax.random.normal(jax.random.PRNGKey(seed), (b, v), jnp.float32)
+    init = jnp.broadcast_to(
+        jnp.argmax(table, -1).astype(jnp.uint32)[:, None], (b, chains)
+    )
+    return samplers.TableTarget(table), init
+
+
+def _bcast(init, n):
+    return jnp.broadcast_to(init, (n, *init.shape))
+
+
+class TestLadder:
+    def test_geometric_shape_and_order(self):
+        ladder = tempering.Ladder.geometric(4, beta_min=0.25)
+        assert ladder.betas[0] == pytest.approx(1.0)
+        assert ladder.betas[-1] == pytest.approx(0.25)
+        assert all(a >= b for a, b in zip(ladder.betas, ladder.betas[1:]))
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="non-increasing"):
+            tempering.Ladder((0.5, 1.0))
+        with pytest.raises(ValueError, match="finite"):
+            tempering.Ladder((1.0, 0.0))
+        with pytest.raises(ValueError, match="non-decreasing"):
+            tempering.Annealer((2.0, 1.0), 4)
+
+    def test_scaled_target_beta_one_is_identity(self):
+        target, _ = _mh_target()
+        assert tempering.scaled_target(target, 1.0) is target
+
+    def test_scaled_table_and_lattice(self):
+        target, _ = _mh_target()
+        scaled = tempering.scaled_target(target, 0.5)
+        np.testing.assert_allclose(
+            np.asarray(scaled.table), 0.5 * np.asarray(target.table)
+        )
+        model, init = _glass()
+        tempered = tempering.scaled_target(model, 0.5)
+        assert tempered.supports_fused_gibbs
+        np.testing.assert_allclose(
+            np.asarray(tempered.conditional_logit(init)),
+            0.5 * np.asarray(model.conditional_logit(init)),
+        )
+        # observables delegate to the base model
+        np.testing.assert_array_equal(
+            np.asarray(tempered.energy(init)), np.asarray(model.energy(init))
+        )
+
+
+class TestTemperedParity:
+    @pytest.mark.parametrize("update", ["mh", "gibbs"])
+    def test_bit_identical_across_executors_and_chunkings(self, update):
+        """The ISSUE-4 acceptance matrix: one tempered stream per key,
+        whatever the executor or chunk size."""
+        if update == "mh":
+            target, init = _mh_target()
+        else:
+            target, init = _glass()
+        ladder = tempering.Ladder.geometric(3, beta_min=0.3)
+        key = jax.random.PRNGKey(7)
+        runs = {}
+        for execution in ("scan", "pallas"):
+            for chunk in (5, 1000):
+                engine = _engine(
+                    update=update, execution=execution, chunk_steps=chunk
+                )
+                rex = tempering.ReplicaExchange(
+                    ladder=ladder, engine=engine, swap_every=6
+                )
+                runs[(execution, chunk)] = rex.run(
+                    key, target, 20, _bcast(init, 3)
+                )
+        base = runs[("scan", 5)]
+        for res in runs.values():
+            np.testing.assert_array_equal(
+                np.asarray(base.samples), np.asarray(res.samples)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(base.accept_count), np.asarray(res.accept_count)
+            )
+
+    @pytest.mark.parametrize("update", ["mh", "gibbs"])
+    def test_one_replica_ladder_is_plain_engine_run(self, update):
+        """R=1 degenerates bit-for-bit: the segment boundaries (step0
+        resume) leave the stream untouched and no swap ever fires."""
+        if update == "mh":
+            target, init = _mh_target()
+        else:
+            target, init = _glass()
+        key = jax.random.PRNGKey(3)
+        engine = _engine(update=update, chunk_steps=8)
+        rex = tempering.ReplicaExchange(
+            ladder=tempering.Ladder((1.0,)), engine=engine, swap_every=7
+        )
+        tempered = rex.run(key, target, 25, init[None])
+        plain = engine.run(key, target, 25, init)
+        np.testing.assert_array_equal(
+            np.asarray(tempered.samples[0]), np.asarray(plain.samples)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(tempered.accept_count[0]),
+            np.asarray(plain.accept_count),
+        )
+        assert tempered.swap.events == 0
+
+    def test_replica_streams_are_chain_slots(self):
+        """Replica r's within-segment randomness is chain slot r: with
+        swaps disabled by a huge swap_every, replica r == a plain run
+        with chain_id=r under the per-replica scaled target."""
+        target, init = _mh_target()
+        ladder = tempering.Ladder.geometric(3, beta_min=0.5)
+        key = jax.random.PRNGKey(11)
+        engine = _engine(chunk_steps=8)
+        rex = tempering.ReplicaExchange(
+            ladder=ladder, engine=engine, swap_every=1000
+        )
+        tempered = rex.run(key, target, 12, _bcast(init, 3))
+        for r, beta in enumerate(ladder.betas):
+            solo = engine.run(
+                key, tempering.scaled_target(target, beta), 12, init,
+                chain_id=r,
+            )
+            np.testing.assert_array_equal(
+                np.asarray(tempered.samples[r]), np.asarray(solo.samples)
+            )
+
+
+class TestSwapCorrectness:
+    def test_equal_betas_always_swap(self):
+        """delta = 0 => accept prob 1: every active-parity pair must
+        exchange (u < exp(0) holds a.s. for u in [0, 1))."""
+        target, init = _mh_target()
+        rex = tempering.ReplicaExchange(
+            ladder=tempering.Ladder((1.0, 1.0, 1.0)),
+            engine=_engine(chunk_steps=8),
+            swap_every=4,
+        )
+        result = rex.run(jax.random.PRNGKey(0), target, 16, _bcast(init, 3))
+        summary = result.swap.summary()
+        assert summary["swap_events"] == 3
+        assert summary["swap_accept_rate"] == 1.0
+
+    @pytest.mark.parametrize("randomness", ["host", "cim"])
+    def test_swap_acceptance_strictly_inside_unit_interval(self, randomness):
+        """The ISSUE-4 diagnostic criterion: on a frustrated glass with a
+        real ladder, every pair accepts some and rejects some swaps —
+        for both randomness backends (swap uniforms ride the same
+        backend stream as the sampling moves)."""
+        model, init = _glass(batch=4)
+        rex = tempering.ReplicaExchange(
+            ladder=tempering.Ladder.geometric(4, beta_min=0.2),
+            engine=_engine(update="gibbs", randomness=randomness,
+                           chunk_steps=8),
+            swap_every=4,
+        )
+        result = rex.run(
+            jax.random.PRNGKey(2), model, 96, _bcast(init, 4)
+        )
+        for rate in result.swap.summary()["pair_accept_rate"]:
+            assert 0.0 < rate < 1.0
+
+    def test_round_trips_counted(self):
+        """Equal betas swap deterministically, so walkers shuttle across
+        the ladder and complete round trips."""
+        target, init = _mh_target(chains=2)
+        rex = tempering.ReplicaExchange(
+            ladder=tempering.Ladder((1.0, 1.0)),
+            engine=_engine(chunk_steps=4),
+            swap_every=2,
+        )
+        result = rex.run(jax.random.PRNGKey(0), target, 20, _bcast(init, 2))
+        assert result.swap.summary()["round_trips"] > 0
+
+    def test_init_needs_leading_replica_axis(self):
+        target, init = _mh_target()
+        rex = tempering.ReplicaExchange(
+            ladder=tempering.Ladder.geometric(3), engine=_engine()
+        )
+        with pytest.raises(ValueError, match="leading"):
+            rex.run(jax.random.PRNGKey(0), target, 8, init)
+
+    def test_rejects_multi_chain_engine(self):
+        with pytest.raises(ValueError, match="chain-id axis"):
+            tempering.ReplicaExchange(
+                ladder=tempering.Ladder.geometric(2),
+                engine=_engine(num_chains=2),
+            )
+
+
+class TestAnnealing:
+    @pytest.mark.parametrize("randomness", ["host", "cim"])
+    def test_reaches_exhaustive_ground_state(self, randomness):
+        """The ISSUE-4 optimality criterion: on a 4x4 ±J glass the
+        annealer's best-ever state hits the exact brute-force ground
+        energy, under both randomness backends."""
+        model, init = _glass(batch=2)
+        ground_e, _ = exhaustive_ground_state(model)
+        annealer = tempering.Annealer.geometric(
+            8, 32, beta_min=0.4, beta_max=4.0
+        )
+        engine = _engine(update="gibbs", randomness=randomness,
+                         chunk_steps=16)
+        result = annealer.run(jax.random.PRNGKey(0), model, init,
+                              engine=engine)
+        best = float(np.asarray(result.best_energy).min())
+        assert best == pytest.approx(ground_e)
+        # the tracker's stored words must reproduce the stored energy
+        np.testing.assert_allclose(
+            np.asarray(model.energy(result.best_words)),
+            np.asarray(result.best_energy),
+        )
+
+    def test_single_stage_beta_one_is_plain_run(self):
+        """Annealing degenerates exactly like the 1-replica ladder."""
+        model, init = _glass()
+        engine = _engine(update="gibbs", chunk_steps=8)
+        annealer = tempering.Annealer((1.0,), 16)
+        res = annealer.run(jax.random.PRNGKey(5), model, init, engine=engine)
+        plain = engine.run(jax.random.PRNGKey(5), model, 16, init)
+        np.testing.assert_array_equal(
+            np.asarray(res.final_words), np.asarray(plain.final_words)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(res.accept_count), np.asarray(plain.accept_count)
+        )
+
+
+class TestSpinGlassWorkload:
+    def test_registered_and_cli_visible(self):
+        from repro import workloads
+
+        assert "spin_glass" in workloads.WORKLOADS
+        parser = sample_cli.build_parser()
+        action = next(
+            a for a in parser._actions if a.dest == "workload"
+        )
+        assert "spin_glass" in action.choices
+
+    def test_scan_pallas_parity(self):
+        """Heterogeneous couplings ride the kernel as fused_consts
+        operands; the streams must stay bit-identical to scan."""
+        model, init = _glass()
+        key = jax.random.PRNGKey(9)
+        r_scan = _engine(update="gibbs", execution="scan", chunk_steps=8).run(
+            key, model, 20, init
+        )
+        r_pal = _engine(update="gibbs", execution="pallas", chunk_steps=8).run(
+            key, model, 20, init
+        )
+        np.testing.assert_array_equal(
+            np.asarray(r_scan.samples), np.asarray(r_pal.samples)
+        )
+
+    def test_energy_consistent_with_conditional(self):
+        """Flipping one site changes E by exactly the conditional
+        logit's prediction: E(s_i=0) - E(s_i=1) = logit_i."""
+        model, init = _glass(batch=1)
+        state = init[0]
+        logit = np.asarray(model.conditional_logit(state))
+        for i, j in ((0, 0), (1, 2), (3, 1)):
+            s_up = np.asarray(state).copy()
+            s_dn = s_up.copy()
+            s_up[i, j], s_dn[i, j] = 1, 0
+            de = float(
+                model.energy(jnp.asarray(s_dn)) - model.energy(jnp.asarray(s_up))
+            )
+            assert de == pytest.approx(logit[i, j], abs=1e-4)
+
+    def test_even_lattice_required(self):
+        with pytest.raises(ValueError, match="even"):
+            SpinGlass.bimodal(jax.random.PRNGKey(0), 3, 4)
+
+    def test_maxcut_cut_value_matches_partition_sum(self):
+        model = SpinGlass.maxcut(jax.random.PRNGKey(4), 4, 4)
+        state = model.random_init(jax.random.PRNGKey(5), 1)[0]
+        s = np.asarray(state)
+        w_r = -np.asarray(model.j_right)
+        w_d = -np.asarray(model.j_down)
+        cut = (
+            (w_r * (s != np.roll(s, -1, -1))).sum()
+            + (w_d * (s != np.roll(s, -1, -2))).sum()
+        )
+        assert float(model.cut_value(state)) == pytest.approx(cut)
+        with pytest.raises(ValueError, match="MAX-CUT"):
+            SpinGlass.bimodal(jax.random.PRNGKey(0), 4, 4).cut_value(state)
+
+    def test_cli_ladder_and_anneal_smoke(self, capsys):
+        row = sample_cli.main(
+            ["--workload", "spin_glass", "--smoke", "--steps", "24",
+             "--ladder", "3", "--swap-every", "6"]
+        )
+        assert row["mode"] == "ladder"
+        assert row["num_replicas"] == 3
+        assert "swap_accept_rate" in row and "round_trips" in row
+        assert "flip_rate" in row  # gibbs rate labelled as a flip count
+        assert "mode=ladder" in capsys.readouterr().out
+
+        row = sample_cli.main(
+            ["--workload", "spin_glass", "--smoke", "--steps", "24",
+             "--anneal", "4"]
+        )
+        assert row["mode"] == "anneal"
+        assert "best_energy" in row
+        assert "best_cut" not in row  # bimodal glass: no cut story
+
+        row = sample_cli.main(
+            ["--workload", "spin_glass", "--smoke", "--steps", "24",
+             "--anneal", "4", "--maxcut"]
+        )
+        assert row["best_cut"] >= 0.0  # signed MAX-CUT reduction wired up
+
+    def test_cli_rejects_ladder_with_num_chains(self):
+        with pytest.raises(SystemExit):
+            sample_cli.main(
+                ["--workload", "spin_glass", "--smoke", "--ladder", "2",
+                 "--num-chains", "2"]
+            )
