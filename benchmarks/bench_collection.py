@@ -1,0 +1,166 @@
+"""Collection-axis benchmark: engine traffic proportional to what is kept.
+
+The paper's core argument is that RNG and state *movement* — not
+arithmetic — dominate MCMC cost (0.53 pJ/sample comes from never
+shipping operands off the sub-array).  The engine's collection axis
+(DESIGN.md §Collection) is the software edition: ``collect="all"``
+materialises every post-step state, ``"thin:16"`` keeps every 16th
+absolute step, ``"last"`` keeps only the final state.  This table
+measures steps/s and the engine's peak operand/output footprint across
+collect x update-rule x randomness, on the scan executor (the substrate
+every CPU/GPU run actually uses; the collection logic upstream of the
+kernels is shared with the pallas executors).
+
+The headline row pair is the long-chain Gibbs run: under ``"all"`` the
+(K, B, H, W) sample buffer dominates the run, under ``"last"`` the same
+chain runs in O(state) output memory and >= 1.5x the steps/s.  The cim
+rows additionally carry the operand-lean u-only win: Gibbs never reads
+flip words, so ``need_flips=False`` skips pseudo-read plane generation
+entirely (visible as the gibbs/cim throughput gain over the pre-axis
+baseline in BENCH_workloads.json).
+
+``run(smoke=True)`` uses tiny presets for the CI bench-smoke job
+(benchmarks/check_regression.py gates these rows).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.bench_workloads import machine_calibration
+from repro import samplers
+from repro.workloads.ising import IsingModel
+
+COLLECTS = ("all", "thin:16", "last")
+
+
+def _mh_setup(seed, batch, chains, vocab):
+    key = jax.random.PRNGKey(seed)
+    table = jax.random.normal(key, (batch, vocab), jnp.float32)
+    target = samplers.TableTarget(table)
+    init = jnp.broadcast_to(
+        jnp.argmax(table, -1).astype(jnp.uint32)[:, None], (batch, chains)
+    )
+    return target, init
+
+
+def _gibbs_setup(seed, batch, side):
+    model = IsingModel(height=side, width=side, beta=0.35)
+    init = model.random_init(jax.random.PRNGKey(seed), batch)
+    return model, init
+
+
+def _footprint_mb(update, collect, n_steps, n_sites, chunk, nbits) -> dict:
+    """Analytic peak engine traffic (beyond the O(state) carry), in MB:
+    the streamed per-chunk operands — u always, flip words only for mh
+    (gibbs runs the u-only ``need_flips=False`` path) — plus the kept
+    sample buffer the collection mode retains."""
+    mode, k = samplers.parse_collect(collect)
+    chunk = max(1, min(chunk, n_steps))
+    if mode == "all":
+        kept = n_steps
+    elif mode == "thin":
+        kept = samplers.kept_count(n_steps, k)
+    else:
+        kept = 0
+    u_mb = chunk * n_sites * 4 / 1e6
+    flips_mb = chunk * n_sites * 4 / 1e6 if update == "mh" else 0.0
+    return {
+        "kept_steps": kept,
+        "chunk_operand_mb": round(u_mb + flips_mb, 3),
+        "kept_sample_mb": round(kept * n_sites * 4 / 1e6, 3),
+        "peak_operand_mb": round(
+            u_mb + flips_mb + kept * n_sites * 4 / 1e6, 3
+        ),
+    }
+
+
+def bench_case(
+    update: str, randomness: str, collect: str, n_steps: int,
+    chunk_steps: int, target, init, repeats: int = 2,
+) -> dict:
+    """One timed eager ``engine.run`` (the CLI/workload call path), best
+    of ``repeats`` with a warm-up compile pass, all outputs blocked on."""
+    engine = samplers.MHEngine(
+        samplers.EngineConfig(
+            update=update,
+            randomness=randomness,
+            execution="scan",
+            chunk_steps=chunk_steps,
+            collect=collect,
+        )
+    )
+    key = jax.random.PRNGKey(0)
+
+    def once():
+        result = engine.run(key, target, n_steps, init)
+        jax.block_until_ready((result.samples, result.final_words))
+        return result
+
+    once()  # warm-up compile
+    wall_s = float("inf")
+    for _ in range(max(1, repeats)):
+        t0 = time.time()
+        once()
+        wall_s = min(wall_s, time.time() - t0)
+
+    n_sites = int(init.size)
+    nbits = getattr(target, "nbits", 1)
+    row = {
+        "bench": "collection",
+        "update": update,
+        "randomness": randomness,
+        "collect": collect,
+        "n_steps": n_steps,
+        "chunk_steps": chunk_steps,
+        "n_sites": n_sites,
+        "wall_s": round(wall_s, 3),
+        "steps_per_s": round(n_steps / max(wall_s, 1e-9), 1),
+        "site_steps_per_s": round(
+            n_steps * n_sites / max(wall_s, 1e-9), 1
+        ),
+        "calib_steps_per_s": round(machine_calibration(), 1),
+    }
+    row.update(
+        _footprint_mb(update, collect, n_steps, n_sites, chunk_steps, nbits)
+    )
+    return row
+
+
+def presets(smoke: bool = False):
+    """(update, randomness, n_steps, chunk, setup) cases.
+
+    Full-size host rows are the long-chain regime where the sample
+    buffer reaches GB scale (the headline collect="last" win); cim rows
+    are shorter — the MSXOR u pipeline costs ~50x host randomness per
+    step, and the collection axis is orthogonal to that cost.
+    """
+    if smoke:
+        return (
+            ("mh", "host", 768, 64, _mh_setup(0, 2, 128, 64)),
+            ("mh", "cim", 768, 64, _mh_setup(0, 2, 128, 64)),
+            ("gibbs", "host", 768, 64, _gibbs_setup(1, 2, 8)),
+            ("gibbs", "cim", 768, 64, _gibbs_setup(1, 2, 8)),
+        )
+    return (
+        ("mh", "host", 50000, 128, _mh_setup(0, 2, 512, 256)),
+        ("mh", "cim", 2048, 64, _mh_setup(0, 2, 128, 256)),
+        ("gibbs", "host", 50000, 128, _gibbs_setup(1, 8, 32)),
+        ("gibbs", "cim", 2048, 64, _gibbs_setup(1, 2, 16)),
+    )
+
+
+def run(smoke: bool = False) -> list[dict]:
+    rows = []
+    for update, randomness, n_steps, chunk, (target, init) in presets(smoke):
+        for collect in COLLECTS:
+            rows.append(
+                bench_case(
+                    update, randomness, collect, n_steps, chunk,
+                    target, init, repeats=5 if smoke else 2,
+                )
+            )
+    return rows

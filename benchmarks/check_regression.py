@@ -25,6 +25,7 @@ import sys
 MEASURED_FIELDS = frozenset({
     "wall_s",
     "site_steps_per_s",
+    "steps_per_s",
     "calib_steps_per_s",
     "acceptance",
     "flip_rate",
@@ -34,6 +35,13 @@ MEASURED_FIELDS = frozenset({
     "macro_energy_uj",
     "ess_per_joule",
     "window_capped",
+    # collection table (benchmarks/bench_collection.py) — analytic
+    # footprints ride along as measured so formula tweaks never orphan
+    # a baseline row
+    "kept_steps",
+    "chunk_operand_mb",
+    "kept_sample_mb",
+    "peak_operand_mb",
     # tempering table (benchmarks/bench_tempering.py)
     "swap_accept_rate",
     "swap_rate_min",

@@ -41,6 +41,7 @@ MODULES = [
     ("workloads", "benchmarks.bench_workloads"),
     ("chain_scaling", "benchmarks.bench_chain_scaling"),
     ("tempering", "benchmarks.bench_tempering"),
+    ("collection", "benchmarks.bench_collection"),
 ]
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

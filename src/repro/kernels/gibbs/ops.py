@@ -32,6 +32,12 @@ def gibbs_sweep(init, u, logit_fn, parity0: int = 0, consts: tuple = ()):
     ``logit_fn(state, *consts)`` — since the kernel trace cannot capture
     array closures.  Returns (samples (K, B, H, W) uint32, flip_count
     (B, H, W) int32).
+
+    Gibbs reads no flip words, so the engine sources ``u`` through the
+    operand-lean ``RandomnessBackend.chunk(..., need_flips=False)`` path
+    (same u stream, no pseudo-read planes) and its shared chunk
+    scheduler keeps/drops the returned samples per its collection mode
+    (DESIGN.md §Collection) — this wrapper always emits the full chunk.
     """
     return gibbs_chain_pallas(
         init,

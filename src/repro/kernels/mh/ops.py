@@ -29,7 +29,11 @@ def _round_up(x: int, mult: int) -> int:
 
 
 def mh_sample(table, init, flips, u, nbits: int, block_c: int = 256):
-    """Pad the chain axis to a lane multiple and run the fused kernel."""
+    """Pad the chain axis to a lane multiple and run the fused kernel.
+
+    Emits every step of the chunk; the engine's shared chunk scheduler
+    (``_drive_pallas_chunks``) slices what its collection mode keeps
+    into a preallocated stream buffer (DESIGN.md §Collection)."""
     b, c = init.shape
     bc = min(block_c, _round_up(c, 128))
     c_pad = _round_up(c, bc)

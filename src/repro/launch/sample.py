@@ -16,6 +16,13 @@ Usage:
   PYTHONPATH=src python -m repro.launch.sample --workload ising \
       --num-chains 8 --backend pallas
 
+  # long chain, keep every 16th sample (diagnostics on the kept stream)
+  PYTHONPATH=src python -m repro.launch.sample --workload ising \
+      --steps 20000 --thin 16
+  # optimisation-style run: O(state) sample memory, rate-only output
+  PYTHONPATH=src python -m repro.launch.sample --workload spin_glass \
+      --steps 50000 --keep-last
+
 Workload choices and their knobs come straight from the
 ``workloads.WORKLOADS`` registry (flags a builder doesn't accept are
 simply not forwarded), so a newly registered workload appears here with
@@ -74,6 +81,18 @@ def build_parser() -> argparse.ArgumentParser:
         "--num-chains", type=int, default=1,
         help="independent chains run in one device program",
     )
+    # collection axis (DESIGN.md §Collection) — mutually exclusive
+    coll = p.add_mutually_exclusive_group()
+    coll.add_argument(
+        "--thin", type=int, default=None, metavar="K",
+        help="keep every K-th absolute step (engine collect='thin:K'); "
+        "diagnostics run on the kept stream",
+    )
+    coll.add_argument(
+        "--keep-last", action="store_true",
+        help="keep only the final state (engine collect='last'): O(state) "
+        "sample memory for any chain length; series diagnostics skipped",
+    )
     p.add_argument("--seed", type=int, default=0)
     # lattice knobs (ising / spin_glass)
     p.add_argument("--height", type=int, default=None, help="lattice H")
@@ -113,6 +132,15 @@ def build_parser() -> argparse.ArgumentParser:
     return p
 
 
+def _collect_arg(args) -> str:
+    """The engine collection spec the CLI flags select."""
+    if args.thin is not None:
+        if args.thin < 1:
+            raise SystemExit(f"--thin must be >= 1, got {args.thin}")
+        return f"thin:{args.thin}"
+    return "last" if args.keep_last else "all"
+
+
 def _workload_kwargs(args) -> dict:
     """Forward exactly the flags the registered builder accepts — the
     registry, not this module, decides a workload's knobs."""
@@ -122,6 +150,7 @@ def _workload_kwargs(args) -> dict:
         smoke=args.smoke,
         n_steps=args.steps,
         num_chains=args.num_chains,
+        collect=_collect_arg(args),
         height=args.height,
         width=args.width,
         batch=args.batch,
@@ -247,6 +276,14 @@ def main(argv=None) -> dict:
             "--ladder/--anneal occupy the engine's chain-id axis; batch "
             "the workload (e.g. --batch/--chains) for parallel ensembles"
         )
+    if (args.ladder or args.anneal) and (
+        args.thin is not None or args.keep_last
+    ):
+        parser.error(
+            "--thin/--keep-last apply to plain runs; the tempering "
+            "drivers consume the full segment streams for their own "
+            "diagnostics/best-state tracking"
+        )
     key = jax.random.PRNGKey(args.seed)
     k_init, k_run = jax.random.split(key)
     wl = workloads.build(args.workload, k_init, **_workload_kwargs(args))
@@ -256,6 +293,7 @@ def main(argv=None) -> dict:
         "update": wl.engine.config.update,
         "randomness": args.randomness,
         "backend": args.backend,
+        "collect": _collect_arg(args),
     }
     if args.ladder:
         row = {**base, **_run_ladder(args, wl, k_run)}

@@ -1,5 +1,5 @@
 # The unified sampler engine (DESIGN.md §2): one chain datapath,
-# pluggable on four orthogonal axes —
+# pluggable on five orthogonal axes —
 #
 #   targets      what the chain samples (callable log-prob / (B,V) table /
 #                top-k-restricted logits / conditional lattice models)
@@ -9,6 +9,8 @@
 #                the CIM pseudo-read + MSXOR pipeline), streamed in chunks
 #   engine       how steps execute (pure-JAX lax.scan vs the fused Pallas
 #                kernel), auto-dispatched by jax.default_backend()
+#   collection   how much of the chain leaves the engine (all states /
+#                every k-th absolute step / final state only)
 #
 # core/metropolis.py, core/token_sampler.py, core/macro.py and
 # launch/serve.py are all thin layers over this package.
@@ -18,6 +20,8 @@ from repro.samplers.engine import (  # noqa: F401
     EngineResult,
     MHEngine,
     SamplerEngine,
+    kept_count,
+    parse_collect,
     resolve_execution,
     run_engine,
 )

@@ -29,6 +29,17 @@ only on ``(key, step0 + t)`` — so chains of any length run in O(chunk)
 operand memory, and a run resumed at ``step0 = s`` continues the exact
 stream a longer run would have produced (the segment-invariance the
 tempering subsystem builds on, DESIGN.md §Tempering).
+
+A fifth axis, **collection** (DESIGN.md §Collection), decides how much
+of the chain leaves the engine: ``collect="all"`` materialises every
+post-step state (the historical behaviour and the default),
+``"thin:<k>"`` keeps exactly the absolute steps ``(step0 + t) % k == 0``
+(so thinned samples are a strided slice of the ``"all"`` stream,
+invariant to chunking and segmentation), and ``"last"`` keeps nothing —
+only (final_words, final_logp, accept_count) cross chunk boundaries, so
+arbitrarily long chains run in O(state) output memory.  The collection
+mode never changes the chain itself: operands are generated per absolute
+step regardless of what is kept.
 """
 
 from __future__ import annotations
@@ -54,6 +65,58 @@ _EXECUTION_CHOICES = ("auto", "scan", "pallas")
 _UPDATE_CHOICES = ("mh", "gibbs")
 
 
+def parse_collect(collect: str) -> tuple[str, int]:
+    """Validate a collection spec; returns ``(mode, k)``.
+
+    ``"all"`` -> ("all", 1), ``"thin:<k>"`` -> ("thin", k) for k >= 1,
+    ``"last"`` -> ("last", 0).  The kept-step set is defined on
+    *absolute* step indices (DESIGN.md §Collection): ``thin:k`` keeps
+    ``{t : (step0 + t) % k == 0}``, so thinning commutes with chunking
+    and with segment resumption.
+    """
+    if collect == "all":
+        return ("all", 1)
+    if collect == "last":
+        return ("last", 0)
+    if isinstance(collect, str) and collect.startswith("thin:"):
+        try:
+            k = int(collect[len("thin:"):])
+        except ValueError:
+            k = 0
+        if k >= 1:
+            return ("thin", k)
+    raise ValueError(
+        f"collect must be 'all', 'last' or 'thin:<k>' (k >= 1), "
+        f"got {collect!r}"
+    )
+
+
+def kept_count(n_steps: int, k: int, step0: int = 0) -> int:
+    """Size of the ``thin:k`` kept set {t in [0, n_steps):
+    (step0 + t) % k == 0}."""
+    if k < 1:
+        raise ValueError(f"thin stride k must be >= 1, got {k}")
+    i0 = (-int(step0)) % k
+    return 0 if i0 >= n_steps else (n_steps - i0 - 1) // k + 1
+
+
+def _thin_offset(step0: int, k: int) -> int:
+    """First kept relative step of a span starting at absolute ``step0``."""
+    return (-int(step0)) % k
+
+
+def _effective_chunk(n_steps: int, chunk: int, thin_k: int | None) -> int:
+    """The one chunk-schedule rule shared by every executor: clamp to
+    [1, n_steps], and under ``thin:k`` align to a multiple of k so every
+    full chunk keeps exactly ``chunk // k`` rows (the per-chunk kept
+    slice then has a static shape, which the scan executors' outer
+    ``lax.scan`` requires)."""
+    chunk = max(1, min(chunk, n_steps))
+    if thin_k is not None and thin_k > 1:
+        chunk = thin_k * max(1, chunk // thin_k)
+    return chunk
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """Static configuration of the engine's update/randomness/execution axes."""
@@ -68,6 +131,7 @@ class EngineConfig:
     chunk_steps: int = 64            # randomness streaming granularity
     block_c: int = 256               # pallas chain-axis block size
     num_chains: int = 1              # independent chains (DESIGN.md §Chains)
+    collect: str = "all"             # all | thin:<k> | last (§Collection)
 
     def __post_init__(self):
         if self.execution not in _EXECUTION_CHOICES:
@@ -85,8 +149,17 @@ class EngineConfig:
             )
         if self.chunk_steps < 1:
             raise ValueError(f"chunk_steps must be >= 1, got {self.chunk_steps}")
+        if self.block_c < 1:
+            raise ValueError(f"block_c must be >= 1, got {self.block_c}")
+        if self.rng_bit_width < 1:
+            raise ValueError(
+                f"rng_bit_width must be >= 1, got {self.rng_bit_width}"
+            )
+        if self.rng_stages < 1:
+            raise ValueError(f"rng_stages must be >= 1, got {self.rng_stages}")
         if self.num_chains < 1:
             raise ValueError(f"num_chains must be >= 1, got {self.num_chains}")
+        parse_collect(self.collect)
 
     def backend(self) -> RandomnessBackend:
         return make_randomness_backend(
@@ -99,12 +172,15 @@ class EngineConfig:
 
 
 class EngineResult(NamedTuple):
-    samples: Array          # (K, *chain_shape) uint32 post-step states
+    samples: Array          # (K_kept, *chain_shape) uint32 post-step states
+    #                         K_kept follows config.collect: n_steps under
+    #                         "all", kept_count(...) under "thin:k", and 0
+    #                         under "last" (final_words IS the sample)
     accept_count: Array     # (*chain_shape,) int32
     acceptance_rate: Array  # scalar float32
     final_words: Array      # (*chain_shape,) uint32
     final_logp: Array       # (*chain_shape,) float32
-    n_steps: jnp.int32
+    n_steps: jnp.int32      # total steps run (not kept)
 
 
 def resolve_execution(execution: str, target, update: str = "mh") -> str:
@@ -162,42 +238,77 @@ def _mh_step(target, nbits: int, words, logp, acc, flip, u):
     return words, logp, acc + accept.astype(jnp.int32)
 
 
-def _scan_span(target, nbits, carry, flips, u):
-    """Scan the step body over one chunk of pre-generated operands."""
+def _run_scan_chunked(make_xs, step_fn, carry, n_steps, chunk, step0, collect):
+    """THE scan-side chunk scheduler — the full/remainder scaffolding both
+    scan executors share (mh and gibbs differ only in their operand maker
+    and step body).
 
-    def body(c, xs):
-        words, logp, acc = c
-        words, logp, acc = _mh_step(target, nbits, words, logp, acc, *xs)
-        return (words, logp, acc), words
+    ``make_xs(start, n)`` materialises the operand pytree for absolute
+    steps [start, start + n); ``step_fn(carry, x) -> carry`` advances one
+    step, with ``carry[0]`` the chain state that feeds the sample stream.
+    ``collect`` is a parsed ``(mode, k)`` (see ``parse_collect``): "all"
+    emits every post-step state, "thin" emits the per-chunk strided kept
+    slice (chunks are k-aligned by ``_effective_chunk``, so every full
+    chunk keeps the same row count and the outer scan stays shape-static),
+    and "last" emits nothing — the inner scan carries only the state, so
+    output memory is O(state) for any chain length.
+    """
+    mode, k = collect
+    chunk = _effective_chunk(n_steps, chunk, k if mode == "thin" else None)
+    i0 = _thin_offset(step0, k) if mode == "thin" else 0
+    n_full, rem = divmod(n_steps, chunk)
 
-    return jax.lax.scan(body, carry, (flips, u))
+    def span(c, start, n):
+        def body(c, x):
+            c = step_fn(c, x)
+            return c, (None if mode == "last" else c[0])
+
+        c, ys = jax.lax.scan(body, c, make_xs(start, n))
+        if mode == "thin":
+            # start ≡ step0 (mod k) for every span, so the kept offset is
+            # the same static i0 and the slice shape is chunk-invariant
+            ys = ys[i0::k]
+        return c, ys
+
+    pieces = []
+    if n_full:
+        starts = step0 + jnp.arange(n_full, dtype=jnp.int32) * chunk
+        carry, stacked = jax.lax.scan(
+            lambda c, s: span(c, s, chunk), carry, starts
+        )
+        if mode != "last":
+            pieces.append(stacked.reshape(-1, *stacked.shape[2:]))
+    if rem:
+        carry, tail = span(carry, step0 + n_full * chunk, rem)
+        if mode != "last":
+            pieces.append(tail)
+    if mode == "last":
+        samples = jnp.zeros((0, *carry[0].shape), jnp.uint32)
+    else:
+        samples = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, 0)
+    return samples, carry
 
 
-def _run_scan(key, target, backend, nbits, n_steps, chunk, step0, init_words):
+def _run_scan(
+    key, target, backend, nbits, n_steps, chunk, step0, init_words, collect
+):
     shape = init_words.shape
     carry = (
         init_words.astype(jnp.uint32),
         target.log_prob(init_words.astype(jnp.uint32)).astype(jnp.float32),
         jnp.zeros(shape, jnp.int32),
     )
-    chunk = max(1, min(chunk, n_steps))
-    n_full, rem = divmod(n_steps, chunk)
-    pieces = []
-    if n_full:
 
-        def outer(c, start):
-            flips, u = backend.chunk(key, start, chunk, shape, nbits)
-            return _scan_span(target, nbits, c, flips, u)
+    def make_xs(start, n):
+        return backend.chunk(key, start, n, shape, nbits)
 
-        starts = step0 + jnp.arange(n_full, dtype=jnp.int32) * chunk
-        carry, stacked = jax.lax.scan(outer, carry, starts)
-        pieces.append(stacked.reshape(n_full * chunk, *shape))
-    if rem:
-        flips, u = backend.chunk(key, step0 + n_full * chunk, rem, shape, nbits)
-        carry, tail = _scan_span(target, nbits, carry, flips, u)
-        pieces.append(tail)
-    samples = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, 0)
-    words, logp, acc = carry
+    def step_fn(c, x):
+        flip, u = x
+        return _mh_step(target, nbits, *c, flip, u)
+
+    samples, (words, logp, acc) = _run_scan_chunked(
+        make_xs, step_fn, carry, n_steps, chunk, step0, collect
+    )
     return samples, acc, words, logp
 
 
@@ -216,8 +327,71 @@ def _concrete_step0(step0) -> int:
         ) from e
 
 
+def _drive_pallas_chunks(run_chunk, init_state, n_steps, chunk, step0, collect):
+    """THE fused-executor chunk scheduler — the python chunk loop all four
+    pallas executors share.
+
+    ``run_chunk(state, start, n)`` launches one fused-kernel program for
+    relative steps [start, start + n) and returns (samples (n, *state
+    shape) uint32, per-site count (*state shape) int32).  Under a trace
+    (``run_engine`` or any caller-side jit — which also collapses the
+    loop into a single dispatch) kept rows are written straight into one
+    preallocated output buffer via ``lax.dynamic_update_slice``, which
+    XLA aliases in place, eliminating the historical per-chunk
+    ``pieces`` list + final ``concatenate`` copy.  Eagerly each
+    dynamic_update_slice would instead copy the whole buffer per chunk
+    (O(K²/chunk) traffic), so the eager path keeps the single-copy
+    pieces/concatenate assembly.  Under "last" samples are dropped at
+    the chunk boundary either way and only (state, count) survive.
+    ``step0``/``start`` are concrete here (``_concrete_step0``), so the
+    thin kept-slice per chunk is static.
+    """
+    mode, k = collect
+    chunk = _effective_chunk(n_steps, chunk, k if mode == "thin" else None)
+    state = init_state
+    acc = jnp.zeros(state.shape, jnp.int32)
+    if mode == "all":
+        n_keep = n_steps
+    elif mode == "thin":
+        n_keep = kept_count(n_steps, k, step0)
+    else:
+        n_keep = 0
+    traced = isinstance(state, jax.core.Tracer)
+    out = jnp.zeros((n_keep, *state.shape), jnp.uint32) if traced else None
+    zeros = (0,) * state.ndim
+    pieces = []
+    pos = 0
+
+    def emit(rows):
+        nonlocal out, pos
+        if traced:
+            out = jax.lax.dynamic_update_slice(out, rows, (pos, *zeros))
+            pos += rows.shape[0]
+        else:
+            pieces.append(rows)
+
+    for start in range(0, n_steps, chunk):
+        n = min(chunk, n_steps - start)
+        samples, a = run_chunk(state, start, n)
+        state = samples[-1]
+        acc = acc + a
+        if mode == "all":
+            emit(samples)
+        elif mode == "thin":
+            i0 = _thin_offset(step0 + start, k)
+            if i0 < n:
+                emit(samples[i0::k])
+    if not traced:
+        if not pieces:
+            out = jnp.zeros((n_keep, *state.shape), jnp.uint32)
+        else:
+            out = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, 0)
+    return out, acc, state
+
+
 def _run_pallas(
-    key, target, backend, nbits, n_steps, chunk, step0, block_c, init_words
+    key, target, backend, nbits, n_steps, chunk, step0, block_c, init_words,
+    collect,
 ):
     from repro.kernels.mh import ops as mh_ops  # avoid import cycle
 
@@ -226,19 +400,17 @@ def _run_pallas(
             f"pallas execution expects (B, C) chain state, got {init_words.shape}"
         )
     step0 = _concrete_step0(step0)
-    state = init_words.astype(jnp.uint32)
-    acc = jnp.zeros(state.shape, jnp.int32)
-    pieces = []
-    for start in range(0, n_steps, chunk):
-        n = min(chunk, n_steps - start)
+
+    def run_chunk(state, start, n):
         flips, u = backend.chunk(key, step0 + start, n, state.shape, nbits)
-        samples, a = mh_ops.mh_sample(
+        return mh_ops.mh_sample(
             target.table, state, flips, u, nbits=nbits, block_c=block_c
         )
-        state = samples[-1]
-        acc = acc + a
-        pieces.append(samples)
-    samples = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, 0)
+
+    samples, acc, state = _drive_pallas_chunks(
+        run_chunk, init_words.astype(jnp.uint32), n_steps, chunk, step0,
+        collect,
+    )
     logp = target.log_prob(state).astype(jnp.float32)
     return samples, acc, state, logp
 
@@ -258,47 +430,31 @@ def _gibbs_step(target, state, acc, u, parity):
     return nxt, acc + (nxt != state).astype(jnp.int32)
 
 
-def _gibbs_span(target, carry, u, idx):
-    """Scan the Gibbs half-sweep over one chunk; ``idx`` carries the
-    absolute step numbers so the checkerboard parity survives chunking."""
-
-    def body(c, xs):
-        state, acc = c
-        u_t, t = xs
-        state, acc = _gibbs_step(target, state, acc, u_t, t % 2)
-        return (state, acc), state
-
-    return jax.lax.scan(body, carry, (u, idx))
-
-
-def _run_scan_gibbs(key, target, backend, n_steps, chunk, step0, init_words):
+def _run_scan_gibbs(
+    key, target, backend, n_steps, chunk, step0, init_words, collect
+):
     shape = init_words.shape
     carry = (init_words.astype(jnp.uint32), jnp.zeros(shape, jnp.int32))
-    chunk = max(1, min(chunk, n_steps))
-    n_full, rem = divmod(n_steps, chunk)
-    pieces = []
-    if n_full:
 
-        def outer(c, start):
-            _, u = backend.chunk(key, start, chunk, shape, 1)
-            idx = start + jnp.arange(chunk, dtype=jnp.int32)
-            return _gibbs_span(target, c, u, idx)
+    def make_xs(start, n):
+        # gibbs draws no proposal — the operand-lean u-only path
+        _, u = backend.chunk(key, start, n, shape, 1, need_flips=False)
+        idx = start + jnp.arange(n, dtype=jnp.int32)
+        return (u, idx)
 
-        starts = step0 + jnp.arange(n_full, dtype=jnp.int32) * chunk
-        carry, stacked = jax.lax.scan(outer, carry, starts)
-        pieces.append(stacked.reshape(n_full * chunk, *shape))
-    if rem:
-        start = step0 + n_full * chunk
-        _, u = backend.chunk(key, start, rem, shape, 1)
-        idx = start + jnp.arange(rem, dtype=jnp.int32)
-        carry, tail = _gibbs_span(target, carry, u, idx)
-        pieces.append(tail)
-    samples = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, 0)
-    state, acc = carry
+    def step_fn(c, x):
+        u_t, t = x
+        return _gibbs_step(target, *c, u_t, t % 2)
+
+    samples, (state, acc) = _run_scan_chunked(
+        make_xs, step_fn, carry, n_steps, chunk, step0, collect
+    )
     return samples, acc, state
 
 
-def _run_pallas_gibbs(key, target, backend, n_steps, chunk, step0, init_words):
+def _run_pallas_gibbs(
+    key, target, backend, n_steps, chunk, step0, init_words, collect
+):
     from repro.kernels.gibbs import ops as gibbs_ops  # avoid import cycle
 
     if init_words.ndim != 3:
@@ -307,22 +463,20 @@ def _run_pallas_gibbs(key, target, backend, n_steps, chunk, step0, init_words):
             f"{init_words.shape}"
         )
     step0 = _concrete_step0(step0)
-    state = init_words.astype(jnp.uint32)
-    acc = jnp.zeros(state.shape, jnp.int32)
-    pieces = []
     logit_fn, consts = _fused_gibbs_logit(target)
-    chunk = max(1, min(chunk, n_steps))
-    for start in range(0, n_steps, chunk):
-        n = min(chunk, n_steps - start)
-        _, u = backend.chunk(key, step0 + start, n, state.shape, 1)
-        samples, flips = gibbs_ops.gibbs_sweep(
+
+    def run_chunk(state, start, n):
+        _, u = backend.chunk(
+            key, step0 + start, n, state.shape, 1, need_flips=False
+        )
+        return gibbs_ops.gibbs_sweep(
             state, u, logit_fn, parity0=(step0 + start) % 2, consts=consts
         )
-        state = samples[-1]
-        acc = acc + flips
-        pieces.append(samples)
-    samples = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, 0)
-    return samples, acc, state
+
+    return _drive_pallas_chunks(
+        run_chunk, init_words.astype(jnp.uint32), n_steps, chunk, step0,
+        collect,
+    )
 
 
 # --- chains axis (DESIGN.md §Chains-axis) ----------------------------------
@@ -345,7 +499,8 @@ def _chains_fold_mh(x):
 
 
 def _run_pallas_chains(
-    keys, target, backend, nbits, n_steps, chunk, step0, block_c, init
+    keys, target, backend, nbits, n_steps, chunk, step0, block_c, init,
+    collect,
 ):
     """Fused MH over C chains: one batched-grid kernel program per chunk."""
     from repro.kernels.mh import ops as mh_ops  # avoid import cycle
@@ -357,25 +512,22 @@ def _run_pallas_chains(
         )
     step0 = _concrete_step0(step0)
     c_chains, b, cc = init.shape
-    state = jnp.transpose(init.astype(jnp.uint32), (1, 0, 2)).reshape(
+    state0 = jnp.transpose(init.astype(jnp.uint32), (1, 0, 2)).reshape(
         b, c_chains * cc
     )
-    acc = jnp.zeros(state.shape, jnp.int32)
-    pieces = []
-    chunk = max(1, min(chunk, n_steps))
-    for start in range(0, n_steps, chunk):
-        n = min(chunk, n_steps - start)
+
+    def run_chunk(state, start, n):
         flips, u = jax.vmap(
             lambda k: backend.chunk(k, step0 + start, n, (b, cc), nbits)
         )(keys)
-        samples, a = mh_ops.mh_sample(
+        return mh_ops.mh_sample(
             target.table, state, _chains_fold_mh(flips), _chains_fold_mh(u),
             nbits=nbits, block_c=block_c,
         )
-        state = samples[-1]
-        acc = acc + a
-        pieces.append(samples)
-    samples = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, 0)
+
+    samples, acc, state = _drive_pallas_chunks(
+        run_chunk, state0, n_steps, chunk, step0, collect
+    )
 
     def unfold(x):  # (..., B, C*Cc) -> (C, ..., B, Cc)
         lead = x.shape[:-2]
@@ -397,7 +549,9 @@ def _fused_gibbs_logit(target):
     return target.conditional_logit, ()
 
 
-def _run_pallas_gibbs_chains(keys, target, backend, n_steps, chunk, step0, init):
+def _run_pallas_gibbs_chains(
+    keys, target, backend, n_steps, chunk, step0, init, collect
+):
     """Fused checkerboard Gibbs over C chains: chains fold into the
     lattice-batch grid axis."""
     from repro.kernels.gibbs import ops as gibbs_ops  # avoid import cycle
@@ -410,26 +564,25 @@ def _run_pallas_gibbs_chains(keys, target, backend, n_steps, chunk, step0, init)
     step0 = _concrete_step0(step0)
     logit_fn, consts = _fused_gibbs_logit(target)
     c_chains, b, h, w = init.shape
-    state = init.astype(jnp.uint32).reshape(c_chains * b, h, w)
-    acc = jnp.zeros(state.shape, jnp.int32)
-    pieces = []
-    chunk = max(1, min(chunk, n_steps))
-    for start in range(0, n_steps, chunk):
-        n = min(chunk, n_steps - start)
+    state0 = init.astype(jnp.uint32).reshape(c_chains * b, h, w)
+
+    def run_chunk(state, start, n):
         u = jax.vmap(
-            lambda k: backend.chunk(k, step0 + start, n, (b, h, w), 1)[1]
+            lambda k: backend.chunk(
+                k, step0 + start, n, (b, h, w), 1, need_flips=False
+            )[1]
         )(keys)
         u_fold = jnp.transpose(u, (1, 0, 2, 3, 4)).reshape(
             n, c_chains * b, h, w
         )
-        samples, flips = gibbs_ops.gibbs_sweep(
+        return gibbs_ops.gibbs_sweep(
             state, u_fold, logit_fn, parity0=(step0 + start) % 2,
             consts=consts,
         )
-        state = samples[-1]
-        acc = acc + flips
-        pieces.append(samples)
-    samples = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, 0)
+
+    samples, acc, state = _drive_pallas_chunks(
+        run_chunk, state0, n_steps, chunk, step0, collect
+    )
 
     def unfold(x):  # (..., C*B, H, W) -> (C, ..., B, H, W)
         lead = x.shape[:-3]
@@ -487,10 +640,21 @@ class MHEngine:
 
     def run(
         self, key, target, n_steps: int, init_words, *,
-        chain_id: int = 0, mesh=None, step0=0,
+        chain_id: int = 0, mesh=None, step0=0, collect: str | None = None,
     ) -> EngineResult:
         """Run ``n_steps`` of the configured update rule from
-        ``init_words``; collect every state.
+        ``init_words``; keep what ``collect`` says (default: every state).
+
+        ``collect`` overrides ``config.collect`` for this run (DESIGN.md
+        §Collection): ``"all"`` materialises every post-step state,
+        ``"thin:<k>"`` keeps the absolute steps ``(step0 + t) % k == 0``
+        (bit-identical to the strided slice ``all[(-step0) % k :: k]``,
+        so thinning commutes with chunking *and* with ``step0``
+        segmentation), ``"last"`` keeps none — ``final_words`` /
+        ``final_logp`` / ``accept_count`` are the whole result and
+        ``samples`` is a (0, *chain_shape) placeholder.  The chain
+        dynamics are identical in all three modes.  ``"thin:<k>"``
+        requires a concrete ``step0`` (the kept count is shape-static).
 
         ``step0`` offsets the randomness stream (and the Gibbs
         checkerboard parity) by an absolute step count: operands for
@@ -529,22 +693,25 @@ class MHEngine:
             raise ValueError(f"n_steps must be >= 1, got {n_steps}")
         if isinstance(step0, int) and step0 < 0:
             raise ValueError(f"step0 must be >= 0, got {step0}")
+        collect = self._parse_collect(collect, step0)
         if self.config.num_chains > 1:
             return self._run_chains(
                 key, target, n_steps, init_words, mesh, base=chain_id,
-                step0=step0,
+                step0=step0, collect=collect,
             )
         key = chain_key(key, chain_id)
         if self.config.update == "gibbs":
-            return self._run_gibbs(key, target, n_steps, init_words, step0)
+            return self._run_gibbs(
+                key, target, n_steps, init_words, step0, collect
+            )
         execution = resolve_execution(self.config.execution, target)
         args = (key, target, self._backend, target.nbits, n_steps,
                 self.config.chunk_steps, step0)
         if execution == "scan":
-            samples, acc, words, logp = _run_scan(*args, init_words)
+            samples, acc, words, logp = _run_scan(*args, init_words, collect)
         else:
             samples, acc, words, logp = _run_pallas(
-                *args, self.config.block_c, init_words
+                *args, self.config.block_c, init_words, collect
             )
         total = jnp.float32(n_steps) * jnp.float32(max(1, init_words.size))
         return EngineResult(
@@ -556,8 +723,25 @@ class MHEngine:
             n_steps=jnp.int32(n_steps),
         )
 
+    def _parse_collect(self, collect: str | None, step0) -> tuple[str, int]:
+        """Resolve the run-level override against the config default and
+        pin down thin's static-shape requirement."""
+        mode_k = parse_collect(
+            self.config.collect if collect is None else collect
+        )
+        if mode_k[0] == "thin":
+            try:
+                int(step0)
+            except TypeError as e:
+                raise ValueError(
+                    "collect='thin:<k>' needs a concrete (python int) step0 "
+                    "— the kept-sample count is part of the output shape; "
+                    "use collect='all' or 'last' with traced stream offsets"
+                ) from e
+        return mode_k
+
     def _run_gibbs(
-        self, key, target, n_steps: int, init_words, step0=0
+        self, key, target, n_steps: int, init_words, step0, collect
     ) -> EngineResult:
         if not hasattr(target, "conditional_logit"):
             raise ValueError(
@@ -569,9 +753,9 @@ class MHEngine:
         args = (key, target, self._backend, n_steps, self.config.chunk_steps,
                 step0)
         if execution == "scan":
-            samples, acc, words = _run_scan_gibbs(*args, init_words)
+            samples, acc, words = _run_scan_gibbs(*args, init_words, collect)
         else:
-            samples, acc, words = _run_pallas_gibbs(*args, init_words)
+            samples, acc, words = _run_pallas_gibbs(*args, init_words, collect)
         logit = target.conditional_logit(words)
         logp = jnp.where(
             words == 1, jax.nn.log_sigmoid(logit), jax.nn.log_sigmoid(-logit)
@@ -588,7 +772,7 @@ class MHEngine:
 
     def _run_chains(
         self, key, target, n_steps: int, init_words, mesh, base: int = 0,
-        step0=0,
+        step0=0, collect: tuple[str, int] = ("all", 1),
     ):
         """C independent chains in one device program (optionally sharded).
 
@@ -624,7 +808,7 @@ class MHEngine:
                     return jax.vmap(
                         lambda k, w: _run_scan_gibbs(
                             k, target, self._backend, n_steps,
-                            cfg.chunk_steps, step0, w,
+                            cfg.chunk_steps, step0, w, collect,
                         )
                     )(ks, ini)
             else:
@@ -632,7 +816,7 @@ class MHEngine:
                 def body(ks, ini):
                     return _run_pallas_gibbs_chains(
                         ks, target, self._backend, n_steps, cfg.chunk_steps,
-                        step0, ini,
+                        step0, ini, collect,
                     )
 
             body = _shard_over_chains(body, mesh, num_chains, 3)
@@ -652,7 +836,7 @@ class MHEngine:
                     return jax.vmap(
                         lambda k, w: _run_scan(
                             k, target, self._backend, nbits, n_steps,
-                            cfg.chunk_steps, step0, w,
+                            cfg.chunk_steps, step0, w, collect,
                         )
                     )(ks, ini)
             else:
@@ -660,7 +844,7 @@ class MHEngine:
                 def body(ks, ini):
                     return _run_pallas_chains(
                         ks, target, self._backend, nbits, n_steps,
-                        cfg.chunk_steps, step0, cfg.block_c, ini,
+                        cfg.chunk_steps, step0, cfg.block_c, ini, collect,
                     )
 
             body = _shard_over_chains(body, mesh, num_chains, 4)
@@ -707,17 +891,22 @@ SamplerEngine = MHEngine  # the engine outgrew its MH-only name in PR 2
 
 @partial(
     jax.jit,
-    static_argnames=("engine", "target", "n_steps", "chain_id", "step0"),
+    static_argnames=(
+        "engine", "target", "n_steps", "chain_id", "step0", "collect"
+    ),
 )
 def run_engine(
     key, init_words, *, engine: MHEngine, target, n_steps: int,
-    chain_id: int = 0, step0: int = 0,
+    chain_id: int = 0, step0: int = 0, collect: str | None = None,
 ):
     """Jitted engine entry.  ``engine`` and ``target`` are identity-hashed
     statics — reuse the same instances across calls to reuse the trace.
-    ``step0`` is static here (pallas-safe); callers that resume at many
-    offsets should jit ``engine.run`` themselves with a traced offset
-    under scan execution (see tempering/exchange.py)."""
+    ``step0`` and ``collect`` are static here (pallas-safe, and under jit
+    the pallas chunk loop collapses into one dispatch with in-place
+    output-buffer updates); callers that resume at many offsets should
+    jit ``engine.run`` themselves with a traced offset under scan
+    execution (see tempering/exchange.py)."""
     return engine.run(
-        key, target, n_steps, init_words, chain_id=chain_id, step0=step0
+        key, target, n_steps, init_words, chain_id=chain_id, step0=step0,
+        collect=collect,
     )

@@ -21,6 +21,14 @@ depend only on ``(key, t)`` — each step derives its own key via
 any size and the resulting stream is *bit-identical* to the monolithic
 (K, B, C) materialisation.  Long chains are therefore memory-bounded by
 the chunk size, not the chain length.
+
+Operand-lean mode (DESIGN.md §Collection): consumers that never read the
+flip words — the Gibbs update rule draws no proposal, and the tempering
+swap test needs only a uniform — pass ``need_flips=False`` and the
+backend skips flip-plane generation entirely.  The u stream stays
+*bit-identical* because both backends split the step key into
+``(k_flip, k_u)`` before any drawing: ``k_u`` does not depend on whether
+``k_flip`` was ever consumed (asserted in tests/test_collection.py).
 """
 
 from __future__ import annotations
@@ -67,12 +75,16 @@ class RandomnessBackend(Protocol):
     name: str
 
     def chunk(
-        self, key, start, n_steps: int, shape: tuple, nbits: int
-    ) -> tuple[Array, Array]:
+        self, key, start, n_steps: int, shape: tuple, nbits: int,
+        need_flips: bool = True,
+    ) -> tuple[Array | None, Array]:
         """Operands for steps [start, start+n_steps).
 
         Returns (flips (n_steps, *shape) uint32, u (n_steps, *shape)
         float32).  ``start`` may be a traced integer.
+        ``need_flips=False`` skips flip-plane generation and returns
+        ``(None, u)`` with a bit-identical u stream (the step key is
+        split before either operand is drawn).
         """
         ...
 
@@ -85,9 +97,12 @@ class HostRandomness:
 
     name = "host"
 
-    def chunk(self, key, start, n_steps, shape, nbits):
+    def chunk(self, key, start, n_steps, shape, nbits, need_flips=True):
         def one(k):
             k_flip, k_u = jax.random.split(k)
+            u = jax.random.uniform(k_u, shape, jnp.float32)
+            if not need_flips:
+                return u
             planes = jax.random.bernoulli(k_flip, self.p_bfr, (*shape, nbits))
             weights = (
                 jnp.uint32(1) << jnp.arange(nbits, dtype=jnp.uint32)
@@ -95,10 +110,10 @@ class HostRandomness:
             flips = jnp.sum(
                 planes.astype(jnp.uint32) * weights, axis=-1
             ).astype(jnp.uint32)
-            u = jax.random.uniform(k_u, shape, jnp.float32)
             return flips, u
 
-        return jax.vmap(one)(step_keys(key, start, n_steps))
+        out = jax.vmap(one)(step_keys(key, start, n_steps))
+        return out if need_flips else (None, out)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,18 +127,21 @@ class CIMRandomness:
 
     name = "cim"
 
-    def chunk(self, key, start, n_steps, shape, nbits):
+    def chunk(self, key, start, n_steps, shape, nbits, need_flips=True):
         def one(k):
             k_flip, k_u = jax.random.split(k)
-            flips = bitcell.raw_random_words(
-                k_flip, self.p_bfr, shape, nbits=nbits
-            )
             u = uniform_rng.uniform(
                 k_u, shape, self.rng_p_bfr, self.rng_bit_width, self.rng_stages
             )
+            if not need_flips:
+                return u
+            flips = bitcell.raw_random_words(
+                k_flip, self.p_bfr, shape, nbits=nbits
+            )
             return flips, u
 
-        return jax.vmap(one)(step_keys(key, start, n_steps))
+        out = jax.vmap(one)(step_keys(key, start, n_steps))
+        return out if need_flips else (None, out)
 
 
 def make_randomness_backend(

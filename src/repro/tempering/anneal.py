@@ -137,9 +137,11 @@ class Annealer:
         acc = None
         step = 0
         for beta in self.betas:
+            # the best tracker folds over every visited state, so stage
+            # runs pin collect="all" whatever the engine's default is
             res = engine.run(
                 key, scaled_target(target, beta), self.steps_per_beta,
-                state, chain_id=chain_id, step0=step,
+                state, chain_id=chain_id, step0=step, collect="all",
             )
             f = base_log_prob(target, res.samples).astype(jnp.float32)
             stage_words, stage_f = _stage_best(res.samples, f)

@@ -19,7 +19,13 @@ Determinism contract (DESIGN.md §Tempering):
   * segments between swap points run with ``step0 = <absolute step>``,
     so the concatenated per-replica stream is bit-identical to one
     unsegmented engine run (which is also why a 1-replica ladder — no
-    swaps — reproduces a plain run bit-for-bit);
+    swaps — reproduces a plain run bit-for-bit).  The engine's
+    *collection* axis (DESIGN.md §Collection) inherits this for free:
+    its kept set is defined on absolute steps, so an engine configured
+    with ``collect="thin:k"`` yields exactly the thinned monolithic
+    stream, and ``collect="last"`` runs the whole tempered ensemble in
+    O(state) sample memory (``TemperedResult.samples`` is then the
+    (R, 0, ...) placeholder — swaps only ever read final states);
   * swap decisions are keyed on the *absolute* step index: the pair
     parity is ``(step // swap_every - 1) % 2`` and the swap uniforms are
     drawn from the run's own ``RandomnessBackend`` at that step (a
@@ -39,7 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.diagnostics import SwapStats
-from repro.samplers import MHEngine, chain_key
+from repro.samplers import MHEngine, chain_key, parse_collect
 from repro.samplers.engine import resolve_execution
 from repro.tempering.ladder import Ladder, base_log_prob
 
@@ -129,6 +135,10 @@ class ReplicaExchange:
             == "scan"
             for t in targets
         )
+        # thin's kept count is shape-static, so thin segments take the
+        # concrete-step0 path (one trace per offset) even under scan
+        if parse_collect(engine.config.collect)[0] == "thin":
+            scan_exec = False
         elem_shape = tuple(base_log_prob(target, init[0]).shape)
         stats = SwapStats(num_replicas, elem_shape)
 
@@ -194,9 +204,12 @@ class ReplicaExchange:
         expand = (slice(None),) + (None,) * elem_ndim
         delta = (betas[:-1] - betas[1:])[expand] * (f[1:] - f[:-1])
 
+        # operand-lean draw: the swap test consumes only the uniform, so
+        # flip-plane generation is skipped (u stream unchanged, §Collection)
         swap_key = chain_key(key, SWAP_STREAM_ID)
         _, u = self.engine.randomness.chunk(
-            swap_key, abs_step, 1, (num_replicas - 1, *f.shape[1:]), 1
+            swap_key, abs_step, 1, (num_replicas - 1, *f.shape[1:]), 1,
+            need_flips=False,
         )
         parity = (abs_step // self.swap_every - 1) % 2
         active = (jnp.arange(num_replicas - 1) % 2) == parity  # (R-1,)

@@ -63,6 +63,24 @@ class WorkloadRun:
         ]
         return np.concatenate(cols, axis=1)
 
+    def _rate_entry(self, result: samplers.EngineResult) -> tuple[str, float]:
+        """(label, value) for the engine's accept/flip rate — Gibbs has no
+        reject, so its count is a flip count (DESIGN.md §2)."""
+        label = (
+            "flip_rate" if self.engine.config.update == "gibbs"
+            else "acceptance_rate"
+        )
+        return label, round(float(result.acceptance_rate), 4)
+
+    def kept_burn_in(self) -> int:
+        """``burn_in`` translated to the collected stream's row index:
+        under ``thin:k`` the kept steps (step0 = 0) are t = 0, k, 2k, …,
+        so ceil(burn_in / k) kept rows fall inside the burn-in window."""
+        mode, k = samplers.parse_collect(self.engine.config.collect)
+        if mode == "thin":
+            return -(-self.burn_in // k)
+        return self.burn_in
+
     def diagnostics(self, result: samplers.EngineResult) -> dict:
         """Chain diagnostics over the post-burn-in scalar statistic.
 
@@ -74,8 +92,18 @@ class WorkloadRun:
         O(chunk) benefit is realised by producers that feed the
         accumulator chunk-by-chunk without materialising T (see
         DESIGN.md §Chains-axis).
+
+        The collection axis flows through (DESIGN.md §Collection): under
+        ``thin:k`` the estimators consume the kept stream (burn-in
+        translated to kept rows — note tau/ESS then measure the *thinned*
+        series); under ``last`` there is no series, so only the
+        accept/flip rate is reported.
         """
-        series = self.series(result)[self.burn_in:]
+        mode, _ = samplers.parse_collect(self.engine.config.collect)
+        if mode == "last":
+            label, value = self._rate_entry(result)
+            return {"n_steps": 0, label: value}
+        series = self.series(result)[self.kept_burn_in():]
         if self.engine.config.num_chains == 1:
             out = diagnostics.summarize(
                 series, acceptance_rate=float(result.acceptance_rate)
@@ -91,10 +119,11 @@ class WorkloadRun:
                 total_steps=series.shape[0],
                 acceptance_rate=float(result.acceptance_rate),
             )
-        if self.engine.config.update == "gibbs":
-            # Gibbs has no reject — the engine's accept_count is a flip
-            # count (DESIGN.md §2), so the user-facing label says so
-            out["flip_rate"] = out.pop("acceptance_rate")
+        # Gibbs has no reject — the engine's accept_count is a flip
+        # count (DESIGN.md §2); _rate_entry owns the label rule
+        label, _ = self._rate_entry(result)
+        if label != "acceptance_rate":
+            out[label] = out.pop("acceptance_rate")
         return out
 
 

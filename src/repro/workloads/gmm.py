@@ -67,12 +67,15 @@ def build(
     n_steps: int | None = None,
     chunk_steps: int = 32,
     num_chains: int = 1,
+    collect: str = "all",
 ):
     """Assemble the GMM posterior workload (see workloads.WorkloadRun).
 
     ``chains`` is the macro's lock-step compartment axis (one table, C
     columns); ``num_chains`` is the engine's independent-chains axis
     (DESIGN.md §Chains-axis), with counter-derived per-chain inits.
+    ``collect`` (all | thin:<k> | last) is the engine's collection axis
+    (DESIGN.md §Collection).
     """
     from repro import workloads  # deferred: workloads imports this module
 
@@ -89,6 +92,7 @@ def build(
             execution=backend,
             chunk_steps=chunk_steps,
             num_chains=num_chains,
+            collect=collect,
         )
     )
     init = jax.vmap(

@@ -130,13 +130,16 @@ def build(
     n_steps: int | None = None,
     chunk_steps: int = 32,
     num_chains: int = 1,
+    collect: str = "all",
 ):
     """Assemble the Ising workload (see workloads.WorkloadRun).
 
     ``num_chains`` runs C independent chains in one device program
     (DESIGN.md §Chains-axis); inits are counter-derived per chain —
     ``random_init(chain_key(key, c))`` — so chain c of a C-chain build
-    is bit-identical to a solo build, inits included.
+    is bit-identical to a solo build, inits included.  ``collect``
+    (all | thin:<k> | last, DESIGN.md §Collection) flows to the engine;
+    diagnostics consume whatever stream survives.
     """
     from repro import workloads  # deferred: workloads imports this module
 
@@ -157,6 +160,7 @@ def build(
             execution=backend,
             chunk_steps=chunk_steps,
             num_chains=num_chains,
+            collect=collect,
         )
     )
     init = jax.vmap(

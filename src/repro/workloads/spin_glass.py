@@ -226,6 +226,7 @@ def build(
     n_steps: int | None = None,
     chunk_steps: int = 32,
     num_chains: int = 1,
+    collect: str = "all",
 ):
     """Assemble the spin-glass workload (see workloads.WorkloadRun).
 
@@ -259,6 +260,7 @@ def build(
             execution=backend,
             chunk_steps=chunk_steps,
             num_chains=num_chains,
+            collect=collect,
         )
     )
     init = jax.vmap(

@@ -161,6 +161,21 @@ class TestDispatch:
         with pytest.raises(ValueError):
             samplers.EngineConfig(chunk_steps=0)
 
+    @pytest.mark.parametrize("field,bad", [
+        ("block_c", 0),
+        ("block_c", -128),
+        ("rng_bit_width", 0),
+        ("rng_bit_width", -1),
+        ("rng_stages", 0),
+        ("rng_stages", -3),
+    ])
+    def test_engine_config_rejects_nonpositive_knobs(self, field, bad):
+        """block_c / rng_bit_width / rng_stages share chunk_steps' >= 1
+        contract — a non-positive value raises instead of producing a
+        degenerate kernel grid or RNG pipeline."""
+        with pytest.raises(ValueError, match=field):
+            samplers.EngineConfig(**{field: bad})
+
 
 class TestEngineValidation:
     """Negative paths: misconfigurations raise with actionable messages
