@@ -19,6 +19,19 @@ flip words, so ``need_flips=False`` skips pseudo-read plane generation
 entirely (visible as the gibbs/cim throughput gain over the pre-axis
 baseline in BENCH_workloads.json).
 
+Every row also reports the randomness bytes crossing the sampling-kernel
+boundary per step under the pallas executors (DESIGN.md §Randomness) —
+``operand_bytes_per_step`` analytically, ``measured_operand_bytes_per_
+step`` from the nbytes of the arrays the executor actually ships for one
+chunk.  host/cim stream O(sites) operand planes each step; fused ships
+only the per-column/per-lattice key words once per chunk, so its
+per-step traffic is ~0 — the software edition of the paper's
+never-move-the-randomness argument.  The fused rows' timing rides the
+same scan substrate as the rest of the table (the scan executor draws
+the identical stream through the shared counter cipher), where fused
+also out-runs the cim pipeline on steps/s: one Threefry block per draw
+vs pseudo-read planes + MSXOR folds.
+
 ``run(smoke=True)`` uses tiny presets for the CI bench-smoke job
 (benchmarks/check_regression.py gates these rows).
 """
@@ -32,6 +45,7 @@ import jax.numpy as jnp
 
 from benchmarks.bench_workloads import machine_calibration
 from repro import samplers
+from repro.kernels import rng
 from repro.workloads.ising import IsingModel
 
 COLLECTS = ("all", "thin:16", "last")
@@ -75,6 +89,37 @@ def _footprint_mb(update, collect, n_steps, n_sites, chunk, nbits) -> dict:
         "peak_operand_mb": round(
             u_mb + flips_mb + kept * n_sites * 4 / 1e6, 3
         ),
+    }
+
+
+def _operand_traffic(update, randomness, init, chunk, n_steps, nbits) -> dict:
+    """Randomness bytes crossing the sampling-kernel boundary per step
+    under the pallas executors: host/cim ship per-step operand planes
+    (u always, flip words for mh); fused ships only the per-column/
+    per-lattice chain-key words, once per chunk.  The measured column
+    materialises exactly what the executor would ship for one chunk and
+    divides by its steps."""
+    chunk = max(1, min(chunk, n_steps))
+    n_slots = init.shape[1] if update == "mh" else init.shape[0]
+    if randomness == "fused":
+        k0, k1 = rng.key_words(jax.random.PRNGKey(0))
+        shipped = (
+            jnp.broadcast_to(k0, (n_slots,)),
+            jnp.broadcast_to(k1, (n_slots,)),
+        )
+        analytic = 8.0 * n_slots / chunk
+    else:
+        backend = samplers.make_randomness_backend(randomness, p_bfr=0.45)
+        flips, u = backend.chunk(
+            jax.random.PRNGKey(0), 0, chunk, init.shape, nbits,
+            need_flips=(update == "mh"),
+        )
+        shipped = (u,) if flips is None else (flips, u)
+        analytic = (8.0 if update == "mh" else 4.0) * init.size
+    measured = sum(x.nbytes for x in shipped) / chunk
+    return {
+        "operand_bytes_per_step": round(analytic, 1),
+        "measured_operand_bytes_per_step": round(measured, 1),
     }
 
 
@@ -127,6 +172,9 @@ def bench_case(
     row.update(
         _footprint_mb(update, collect, n_steps, n_sites, chunk_steps, nbits)
     )
+    row.update(
+        _operand_traffic(update, randomness, init, chunk_steps, n_steps, nbits)
+    )
     return row
 
 
@@ -142,14 +190,18 @@ def presets(smoke: bool = False):
         return (
             ("mh", "host", 768, 64, _mh_setup(0, 2, 128, 64)),
             ("mh", "cim", 768, 64, _mh_setup(0, 2, 128, 64)),
+            ("mh", "fused", 768, 64, _mh_setup(0, 2, 128, 64)),
             ("gibbs", "host", 768, 64, _gibbs_setup(1, 2, 8)),
             ("gibbs", "cim", 768, 64, _gibbs_setup(1, 2, 8)),
+            ("gibbs", "fused", 768, 64, _gibbs_setup(1, 2, 8)),
         )
     return (
         ("mh", "host", 50000, 128, _mh_setup(0, 2, 512, 256)),
         ("mh", "cim", 2048, 64, _mh_setup(0, 2, 128, 256)),
+        ("mh", "fused", 2048, 64, _mh_setup(0, 2, 128, 256)),
         ("gibbs", "host", 50000, 128, _gibbs_setup(1, 8, 32)),
         ("gibbs", "cim", 2048, 64, _gibbs_setup(1, 2, 16)),
+        ("gibbs", "fused", 2048, 64, _gibbs_setup(1, 2, 16)),
     )
 
 

@@ -42,6 +42,8 @@ MEASURED_FIELDS = frozenset({
     "chunk_operand_mb",
     "kept_sample_mb",
     "peak_operand_mb",
+    "operand_bytes_per_step",
+    "measured_operand_bytes_per_step",
     # tempering table (benchmarks/bench_tempering.py)
     "swap_accept_rate",
     "swap_rate_min",

@@ -31,6 +31,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import rng
+
 
 def _gibbs_kernel(
     init_ref,     # (1, H, W) uint32 {0,1} spins
@@ -122,4 +124,123 @@ def gibbs_chain_pallas(
         ],
         interpret=interpret,
     )(init.astype(jnp.uint32), u, *consts)
+    return samples, flips
+
+
+def _gibbs_fused_kernel(
+    init_ref,     # (1, H, W) uint32 {0,1} spins
+    k0_ref,       # (1, 1) uint32 this lattice's chain-key word 0
+    k1_ref,       # (1, 1) uint32 this lattice's chain-key word 1
+    *rest,        # n_consts broadcast model refs, then the two outputs:
+                  #   samples (K, 1, H, W) uint32, flips (1, H, W) int32
+    logit_fn,
+    n_steps: int,
+    t0: int,
+    lat_b: int,
+    n_consts: int,
+):
+    """In-kernel-RNG checkerboard Gibbs (DESIGN.md §Randomness): no
+    uniform operand planes — the kernel carries this lattice's two
+    chain-key words and derives the site uniforms for absolute step
+    ``t0 + k`` with the shared counter cipher (kernels/rng), exactly the
+    draws the scan-side ``FusedRandomness`` reference makes.  ``lat_b``
+    is the per-chain lattice-batch size (chains fold into the batch
+    grid axis, DESIGN.md §Chains-axis), so lattice ``i`` covers sites
+    ``(i % lat_b) * H * W + h * W + w``.  The checkerboard parity is
+    the absolute step mod 2, inherited from ``t0``."""
+    const_refs, (samples_ref, flips_ref) = rest[:n_consts], rest[n_consts:]
+    consts = tuple(ref[...] for ref in const_refs)
+    state0 = init_ref[0]
+    k0 = k0_ref[0, 0]
+    k1 = k1_ref[0, 0]
+    h, w = state0.shape
+    row = jax.lax.broadcasted_iota(jnp.int32, (h, w), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (h, w), 1)
+    checker = (row + col) % 2
+    i = pl.program_id(0)
+    site = ((i % lat_b) * h * w + row * w + col).astype(jnp.uint32)
+
+    def body(k, carry):
+        state, nflips = carry
+        t = jnp.uint32(t0) + k.astype(jnp.uint32)
+        parity = (t % 2).astype(jnp.int32)
+        s0, s1 = rng.step_key(k0, k1, t)
+        u = rng.uniform_at(s0, s1, site)
+        new = (u < jax.nn.sigmoid(logit_fn(state, *consts))).astype(
+            jnp.uint32
+        )
+        nxt = jnp.where(checker == parity, new, state)
+        samples_ref[k, 0] = nxt
+        return nxt, nflips + (nxt != state).astype(jnp.int32)
+
+    _, nflips = jax.lax.fori_loop(
+        0, n_steps, body, (state0, jnp.zeros_like(state0, jnp.int32))
+    )
+    flips_ref[0] = nflips
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("logit_fn", "n_steps", "t0", "lat_b", "interpret"),
+)
+def gibbs_chain_pallas_fused(
+    init: jnp.ndarray,  # (B, H, W) uint32 {0,1} spins
+    k0b: jnp.ndarray,   # (B,) uint32 per-lattice chain-key word 0
+    k1b: jnp.ndarray,   # (B,) uint32 per-lattice chain-key word 1
+    logit_fn,           # (H, W) state [, *consts] -> (H, W) logit of s=1
+    *,
+    n_steps: int,
+    t0: int,
+    lat_b: int,
+    interpret: bool = True,
+    consts: tuple = (),
+):
+    """Fused K-half-sweep Gibbs with in-kernel RNG: zero per-step
+    randomness operands — only the per-lattice key words (8
+    bytes/lattice/chunk) cross the kernel boundary.  ``t0`` is the
+    absolute step of the first half-sweep (parity = t0 % 2); ``lat_b``
+    the per-chain lattice-batch size.  Same ``logit_fn``/``consts``
+    contract as ``gibbs_chain_pallas``."""
+    b, h, w = init.shape
+    if k0b.shape != (b,) or k1b.shape != (b,):
+        raise ValueError(
+            f"per-lattice key words must be ({b},), got "
+            f"{k0b.shape}/{k1b.shape}"
+        )
+    kernel = functools.partial(
+        _gibbs_fused_kernel,
+        logit_fn=logit_fn,
+        n_steps=n_steps,
+        t0=t0,
+        lat_b=lat_b,
+        n_consts=len(consts),
+    )
+    const_specs = [
+        pl.BlockSpec(c.shape, functools.partial(lambda nd, i: (0,) * nd, c.ndim))
+        for c in consts
+    ]
+    samples, flips = pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            *const_specs,
+        ],
+        out_specs=[
+            pl.BlockSpec((n_steps, 1, h, w), lambda i: (0, i, 0, 0)),
+            pl.BlockSpec((1, h, w), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_steps, b, h, w), jnp.uint32),
+            jax.ShapeDtypeStruct((b, h, w), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        init.astype(jnp.uint32),
+        k0b.reshape(b, 1),
+        k1b.reshape(b, 1),
+        *consts,
+    )
     return samples, flips

@@ -12,7 +12,10 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels.gibbs.gibbs import gibbs_chain_pallas
+from repro.kernels.gibbs.gibbs import (
+    gibbs_chain_pallas,
+    gibbs_chain_pallas_fused,
+)
 
 
 def _on_tpu() -> bool:
@@ -44,6 +47,31 @@ def gibbs_sweep(init, u, logit_fn, parity0: int = 0, consts: tuple = ()):
         u,
         logit_fn,
         parity0=int(parity0),
+        interpret=not _on_tpu(),
+        consts=tuple(consts),
+    )
+
+
+def gibbs_sweep_fused(
+    init, k0b, k1b, logit_fn, *, n_steps: int, t0: int, lat_b: int,
+    consts: tuple = (),
+):
+    """In-kernel-RNG edition of ``gibbs_sweep`` (randomness="fused"): no
+    uniform operand planes — ``k0b``/``k1b`` are the per-lattice
+    chain-key words (8 bytes per lattice per chunk, vs 4 bytes per site
+    per *step* shipped under host/cim) and the kernel derives every
+    half-sweep's site uniforms from the ``(t0 + k, site)`` counter
+    (DESIGN.md §Randomness).  ``t0`` is the absolute step of the first
+    half-sweep (it carries the checkerboard parity); ``lat_b`` the
+    per-chain lattice-batch size (solo callers pass init.shape[0])."""
+    return gibbs_chain_pallas_fused(
+        init,
+        k0b,
+        k1b,
+        logit_fn,
+        n_steps=int(n_steps),
+        t0=int(t0),
+        lat_b=int(lat_b),
         interpret=not _on_tpu(),
         consts=tuple(consts),
     )

@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import rng
+
 
 def _mh_kernel(
     table_ref,    # (1, V) float32
@@ -120,19 +122,154 @@ def mh_chain_pallas(
     return samples, accept
 
 
+def _mh_fused_kernel(
+    table_ref,    # (1, V) float32
+    init_ref,     # (1, BC) uint32
+    k0_ref,       # (1, BC) uint32 per-column chain-key word 0
+    k1_ref,       # (1, BC) uint32 per-column chain-key word 1
+    samples_ref,  # (K, 1, BC) uint32  out
+    accept_ref,   # (1, BC) int32      out
+    *,
+    nbits: int,
+    n_steps: int,
+    t0: int,
+    cc: int,
+    p_u32: int,
+):
+    """In-kernel-RNG MH chain (DESIGN.md §Randomness): instead of (K,)
+    operand planes, the kernel carries two uint32 key words per column
+    and derives the flip word + accept uniform for absolute step
+    ``t0 + k`` at site ``row * cc + col % cc`` with the shared counter
+    cipher (kernels/rng) — the same functions the scan-side
+    ``FusedRandomness`` reference draws through, so parity is by
+    construction.  ``cc`` is the per-chain column count (chains fold
+    chain-major into the compartment axis, DESIGN.md §Chains-axis)."""
+    table = table_ref[0, :]
+    vocab = table.shape[0]
+    mask = jnp.uint32((1 << nbits) - 1)
+    state0 = init_ref[0, :]
+    k0 = k0_ref[0, :]
+    k1 = k1_ref[0, :]
+
+    block_c = state0.shape[0]
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, block_c), 1)[0]
+    col = j * block_c + lane
+    site = (i * cc + col % cc).astype(jnp.uint32)
+
+    def lookup(words):
+        safe = jnp.minimum(words, jnp.uint32(vocab - 1)).astype(jnp.int32)
+        vals = jnp.take(table, safe)
+        return jnp.where(words < vocab, vals, -jnp.inf)
+
+    logp0 = lookup(state0)
+
+    def body(k, carry):
+        state, logp, acc = carry
+        s0, s1 = rng.step_key(k0, k1, jnp.uint32(t0) + k.astype(jnp.uint32))
+        flip = rng.flips_at(s0, s1, site, nbits, p_u32)
+        u = rng.uniform_at(s0, s1, site)
+        cand = jnp.bitwise_xor(state, flip & mask)
+        logp_cand = lookup(cand)
+        delta = (logp_cand - logp).astype(jnp.float32)
+        accept = jnp.logical_and(
+            u < jnp.exp(jnp.minimum(delta, 0.0)),
+            jnp.isfinite(logp_cand),
+        )
+        state = jnp.where(accept, cand, state)       # in-memory copy
+        logp = jnp.where(accept, logp_cand, logp)
+        samples_ref[k, 0, :] = state
+        return state, logp, acc + accept.astype(jnp.int32)
+
+    _, _, acc = jax.lax.fori_loop(
+        0, n_steps, body, (state0, logp0, jnp.zeros_like(state0, jnp.int32))
+    )
+    accept_ref[0, :] = acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "nbits", "n_steps", "t0", "cc", "p_u32", "block_c", "interpret"
+    ),
+)
+def mh_chain_pallas_fused(
+    table: jnp.ndarray,   # (B, V) float32
+    init: jnp.ndarray,    # (B, C) uint32
+    k0c: jnp.ndarray,     # (C,) uint32 per-column chain-key word 0
+    k1c: jnp.ndarray,     # (C,) uint32 per-column chain-key word 1
+    *,
+    nbits: int,
+    n_steps: int,
+    t0: int,
+    cc: int,
+    p_u32: int,
+    block_c: int = 256,
+    interpret: bool = True,
+):
+    """Fused K-step MH with in-kernel RNG: zero per-step randomness
+    operands — only the per-column key words (8 bytes/column/chunk)
+    cross the kernel boundary.  ``t0`` is the absolute step of the first
+    chunk row; ``cc`` the per-chain column count.  C % block_c == 0."""
+    b, vocab = table.shape
+    c = init.shape[1]
+    if k0c.shape != (c,) or k1c.shape != (c,):
+        raise ValueError(
+            f"per-column key words must be ({c},), got "
+            f"{k0c.shape}/{k1c.shape}"
+        )
+    block_c = min(block_c, c)
+    if c % block_c != 0:
+        raise ValueError(f"C={c} not divisible by block_c={block_c}")
+
+    kernel = functools.partial(
+        _mh_fused_kernel,
+        nbits=nbits, n_steps=n_steps, t0=t0, cc=cc, p_u32=p_u32,
+    )
+    samples, accept = pl.pallas_call(
+        kernel,
+        grid=(b, c // block_c),
+        in_specs=[
+            pl.BlockSpec((1, vocab), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_c), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_c), lambda i, j: (0, j)),
+            pl.BlockSpec((1, block_c), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n_steps, 1, block_c), lambda i, j: (0, i, j)),
+            pl.BlockSpec((1, block_c), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_steps, b, c), jnp.uint32),
+            jax.ShapeDtypeStruct((b, c), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        table.astype(jnp.float32),
+        init.astype(jnp.uint32),
+        k0c.reshape(1, c),
+        k1c.reshape(1, c),
+    )
+    return samples, accept
+
+
 def mh_chain_pallas_hwprng(*args, **kwargs):
-    """TPU-only variant that seeds pltpu's per-core PRNG and generates the
-    biased flip words and MSXOR-debiased uniforms in-kernel (no randomness
-    operands, zero HBM traffic for random bits — the paper's property).
+    """TPU-only variant that seeds pltpu's per-core hardware PRNG instead
+    of the portable counter cipher (``mh_chain_pallas_fused`` is the
+    production in-kernel-RNG path — same zero operand traffic, and its
+    stream is executor-portable).
 
     pltpu.prng_seed/prng_random_bits have no CPU/interpret lowering
-    (verified NotImplementedError on this container), so this raises unless
-    running on a TPU backend.
+    (verified NotImplementedError on this container) *and* draw from a
+    hardware stream the scan reference cannot reproduce, so this stays a
+    TPU-only stub.
     """
     if jax.default_backend() != "tpu":
         raise NotImplementedError(
-            "hw_prng MH kernel requires a TPU backend; use mh_chain_pallas "
-            "with explicit randomness operands on CPU/interpret."
+            "hw_prng MH kernel requires a TPU backend; use "
+            "mh_chain_pallas_fused (portable in-kernel counter RNG) or "
+            "mh_chain_pallas with explicit randomness operands."
         )
     raise NotImplementedError(
         "TPU hw-PRNG path: seed pltpu.prng_seed(seed + program_id), draw "

@@ -15,9 +15,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import bitcell
-from repro.kernels.mh.mh import mh_chain_pallas
-from repro.kernels.msxor import ops as msxor_ops
+from repro.kernels import rng
+from repro.kernels.mh.mh import mh_chain_pallas, mh_chain_pallas_fused
 
 
 def _on_tpu() -> bool:
@@ -48,6 +47,35 @@ def mh_sample(table, init, flips, u, nbits: int, block_c: int = 256):
     return samples[:, :, :c], accept[:, :c]
 
 
+def mh_sample_fused(
+    table, init, k0c, k1c, *, n_steps: int, t0: int, nbits: int,
+    p_bfr: float, cc: int, block_c: int = 256,
+):
+    """In-kernel-RNG edition of ``mh_sample`` (randomness="fused"): the
+    chunk's randomness never exists as an operand — ``k0c``/``k1c`` are
+    the per-column chain-key words (8 bytes per column per chunk, vs
+    8 bytes per site per *step* for shipped operands) and the kernel
+    derives each step's flip word + uniform from the ``(t0 + k, site)``
+    counter (DESIGN.md §Randomness).  ``cc`` is the per-chain column
+    count (the solo chain width; multi-chain callers fold chains
+    chain-major).  Padding columns carry zero keys; their chains evolve
+    under the zero-key stream and are sliced off like the operand
+    path's u=1.0 padding."""
+    b, c = init.shape
+    bc = min(block_c, _round_up(c, 128))
+    c_pad = _round_up(c, bc)
+    if c_pad != c:
+        pad = c_pad - c
+        init = jnp.pad(init, ((0, 0), (0, pad)))
+        k0c = jnp.pad(k0c, (0, pad))
+        k1c = jnp.pad(k1c, (0, pad))
+    samples, accept = mh_chain_pallas_fused(
+        table, init, k0c, k1c, nbits=nbits, n_steps=n_steps, t0=t0, cc=cc,
+        p_u32=rng.threshold_u32(p_bfr), block_c=bc, interpret=not _on_tpu(),
+    )
+    return samples[:, :, :c], accept[:, :c]
+
+
 class MHRandomness(NamedTuple):
     flips: jnp.ndarray  # (K, B, C) uint32 biased flip words
     u: jnp.ndarray      # (K, B, C) float32 MSXOR-debiased uniforms
@@ -63,19 +91,21 @@ def generate_randomness(
 ) -> MHRandomness:
     """Paper-faithful randomness: pseudo-read bit-planes + MSXOR uniforms.
 
-    Materialises the full (K, B, C) operand block up front — fine for
-    kernel tests/benchmarks, but long chains should stream chunks via
-    ``repro.samplers.CIMRandomness`` instead (DESIGN.md §2)."""
-    k_flip, k_u = jax.random.split(key)
-    flips = bitcell.raw_random_words(
-        k_flip, p_bfr, (n_steps, batch, chains), nbits=32
+    Thin materialising wrapper over ``samplers.CIMRandomness`` — the one
+    place the pseudo-read + MSXOR operand recipe (and its
+    ``(k_flip, k_u)`` step-key split) lives, so kernel-level callers and
+    the engine draw the *same* stream.  Materialises the full (K, B, C)
+    operand block up front — fine for kernel tests/benchmarks, but long
+    chains should stream chunks through the backend (DESIGN.md §2)."""
+    from repro.samplers.randomness import (  # deferred: samplers imports us
+        CIMRandomness,
     )
-    g = 1 << rng_stages
-    m = n_steps * batch * chains
-    raw_u = bitcell.raw_random_words(k_u, p_bfr, (g, m), nbits=32)
-    u = msxor_ops.msxor_uniform(raw_u, n_stages=rng_stages).reshape(
-        n_steps, batch, chains
+
+    backend = CIMRandomness(
+        p_bfr=p_bfr, rng_p_bfr=p_bfr, rng_bit_width=32,
+        rng_stages=rng_stages,
     )
+    flips, u = backend.chunk(key, 0, n_steps, (batch, chains), nbits=32)
     return MHRandomness(flips=flips, u=u)
 
 

@@ -1,0 +1,18 @@
+# Shared counter-based RNG (DESIGN.md §Randomness): one Threefry-2x32
+# implementation in plain uint32 jnp ops, traced both into the fused
+# Pallas kernel bodies and into the scan-side reference backend, so the
+# randomness="fused" streams are bit-identical across executors by
+# construction.
+
+from repro.kernels.rng.rng import (  # noqa: F401
+    FLIP_SALT,
+    U_SALT,
+    flips_at,
+    key_words,
+    raw_draw,
+    site_index,
+    step_key,
+    threefry2x32,
+    threshold_u32,
+    uniform_at,
+)

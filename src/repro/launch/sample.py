@@ -69,7 +69,12 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument(
         "--workload", required=True, choices=sorted(workloads.WORKLOADS)
     )
-    p.add_argument("--randomness", default="cim", choices=("host", "cim"))
+    p.add_argument(
+        "--randomness", default="cim", choices=("host", "cim", "fused"),
+        help="operand source: host jax.random, the CIM pseudo-read+MSXOR "
+        "pipeline, or fused in-kernel counter RNG (zero operand traffic "
+        "under --backend pallas; DESIGN.md §Randomness)",
+    )
     p.add_argument(
         "--backend", default="auto", choices=("auto", "scan", "pallas")
     )

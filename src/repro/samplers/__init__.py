@@ -5,8 +5,9 @@
 #                top-k-restricted logits / conditional lattice models)
 #   update rule  how a step rewrites the state (MH accept test vs Gibbs
 #                conditional flip)
-#   randomness   where the random operands come from (host jax.random vs
-#                the CIM pseudo-read + MSXOR pipeline), streamed in chunks
+#   randomness   where the random operands come from (host jax.random /
+#                the CIM pseudo-read + MSXOR pipeline / the in-kernel
+#                fused counter cipher), streamed in chunks
 #   engine       how steps execute (pure-JAX lax.scan vs the fused Pallas
 #                kernel), auto-dispatched by jax.default_backend()
 #   collection   how much of the chain leaves the engine (all states /
@@ -27,6 +28,7 @@ from repro.samplers.engine import (  # noqa: F401
 )
 from repro.samplers.randomness import (  # noqa: F401
     CIMRandomness,
+    FusedRandomness,
     HostRandomness,
     RandomnessBackend,
     chain_key,

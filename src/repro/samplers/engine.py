@@ -13,9 +13,13 @@ axes (DESIGN.md §2):
                       ratio) vs ``gibbs`` (checkerboard conditional flip:
                       u < sigmoid(conditional logit), no reject)
   * **randomness**  — ``host`` (plain jax.random) vs ``cim`` (pseudo-read
-                      bit-planes + MSXOR-debiased uniforms); both rules
-                      consume the same accurate-[0,1] uniform stream, so
-                      host-vs-cim comparisons carry across rules
+                      bit-planes + MSXOR-debiased uniforms) vs ``fused``
+                      (in-kernel counter RNG: pallas executors derive the
+                      operands inside the kernel, scan draws the identical
+                      stream through the shared cipher — DESIGN.md
+                      §Randomness); all rules consume the same
+                      accurate-[0,1] uniform stream, so backend
+                      comparisons carry across rules
   * **execution**   — ``scan`` (pure-JAX ``lax.scan``) vs ``pallas`` (the
                       fused VMEM-resident kernel), with ``auto`` picking
                       by ``jax.default_backend()``
@@ -122,7 +126,7 @@ class EngineConfig:
     """Static configuration of the engine's update/randomness/execution axes."""
 
     p_bfr: float = 0.45              # proposal bit-flip rate (pseudo-read)
-    randomness: str = "cim"          # host | cim
+    randomness: str = "cim"          # host | cim | fused (§Randomness)
     rng_p_bfr: float | None = None   # [0,1]-RNG raw-bit bias (default p_bfr)
     rng_bit_width: int = 16          # u precision (cim backend)
     rng_stages: int = 3              # MSXOR stages (cim backend)
@@ -143,9 +147,9 @@ class EngineConfig:
             raise ValueError(
                 f"update must be one of {_UPDATE_CHOICES}, got {self.update!r}"
             )
-        if self.randomness not in ("host", "cim"):
+        if self.randomness not in ("host", "cim", "fused"):
             raise ValueError(
-                f"randomness must be host|cim, got {self.randomness!r}"
+                f"randomness must be host|cim|fused, got {self.randomness!r}"
             )
         if self.chunk_steps < 1:
             raise ValueError(f"chunk_steps must be >= 1, got {self.chunk_steps}")
@@ -389,6 +393,34 @@ def _drive_pallas_chunks(run_chunk, init_state, n_steps, chunk, step0, collect):
     return out, acc, state
 
 
+def _fused_key_cols(keys, repeat: int):
+    """Per-column/lattice chain-key words for the fused kernels: the two
+    uint32 words of each chain key (kernels/rng), repeated over the
+    chain's folded extent — chain-major, matching the executors' fold
+    layout.  ``keys`` is one key or a stacked (C, ...) batch; this is
+    the ONLY randomness state the fused kernels receive (8 bytes per
+    column/lattice per chunk, replacing per-step operand planes)."""
+    from repro.kernels import rng  # avoid import cycle
+
+    if getattr(keys, "ndim", 0) and not jnp.issubdtype(
+        keys.dtype, jax.dtypes.prng_key
+    ):
+        batched = keys.ndim > 1  # raw uint32 keys carry a trailing (2,)
+    else:
+        batched = getattr(keys, "ndim", 0) > 0
+    if batched:
+        kw = jax.vmap(lambda k: jnp.stack(rng.key_words(k)))(keys)
+        return (
+            jnp.repeat(kw[:, 0], repeat),
+            jnp.repeat(kw[:, 1], repeat),
+        )
+    k0, k1 = rng.key_words(keys)
+    return (
+        jnp.broadcast_to(k0, (repeat,)),
+        jnp.broadcast_to(k1, (repeat,)),
+    )
+
+
 def _run_pallas(
     key, target, backend, nbits, n_steps, chunk, step0, block_c, init_words,
     collect,
@@ -401,11 +433,22 @@ def _run_pallas(
         )
     step0 = _concrete_step0(step0)
 
-    def run_chunk(state, start, n):
-        flips, u = backend.chunk(key, step0 + start, n, state.shape, nbits)
-        return mh_ops.mh_sample(
-            target.table, state, flips, u, nbits=nbits, block_c=block_c
-        )
+    if backend.name == "fused":
+        c = init_words.shape[1]
+        k0c, k1c = _fused_key_cols(key, c)
+
+        def run_chunk(state, start, n):
+            return mh_ops.mh_sample_fused(
+                target.table, state, k0c, k1c, n_steps=n, t0=step0 + start,
+                nbits=nbits, p_bfr=backend.p_bfr, cc=c, block_c=block_c,
+            )
+    else:
+
+        def run_chunk(state, start, n):
+            flips, u = backend.chunk(key, step0 + start, n, state.shape, nbits)
+            return mh_ops.mh_sample(
+                target.table, state, flips, u, nbits=nbits, block_c=block_c
+            )
 
     samples, acc, state = _drive_pallas_chunks(
         run_chunk, init_words.astype(jnp.uint32), n_steps, chunk, step0,
@@ -465,13 +508,24 @@ def _run_pallas_gibbs(
     step0 = _concrete_step0(step0)
     logit_fn, consts = _fused_gibbs_logit(target)
 
-    def run_chunk(state, start, n):
-        _, u = backend.chunk(
-            key, step0 + start, n, state.shape, 1, need_flips=False
-        )
-        return gibbs_ops.gibbs_sweep(
-            state, u, logit_fn, parity0=(step0 + start) % 2, consts=consts
-        )
+    if backend.name == "fused":
+        b = init_words.shape[0]
+        k0b, k1b = _fused_key_cols(key, b)
+
+        def run_chunk(state, start, n):
+            return gibbs_ops.gibbs_sweep_fused(
+                state, k0b, k1b, logit_fn, n_steps=n, t0=step0 + start,
+                lat_b=b, consts=consts,
+            )
+    else:
+
+        def run_chunk(state, start, n):
+            _, u = backend.chunk(
+                key, step0 + start, n, state.shape, 1, need_flips=False
+            )
+            return gibbs_ops.gibbs_sweep(
+                state, u, logit_fn, parity0=(step0 + start) % 2, consts=consts
+            )
 
     return _drive_pallas_chunks(
         run_chunk, init_words.astype(jnp.uint32), n_steps, chunk, step0,
@@ -516,14 +570,24 @@ def _run_pallas_chains(
         b, c_chains * cc
     )
 
-    def run_chunk(state, start, n):
-        flips, u = jax.vmap(
-            lambda k: backend.chunk(k, step0 + start, n, (b, cc), nbits)
-        )(keys)
-        return mh_ops.mh_sample(
-            target.table, state, _chains_fold_mh(flips), _chains_fold_mh(u),
-            nbits=nbits, block_c=block_c,
-        )
+    if backend.name == "fused":
+        k0c, k1c = _fused_key_cols(keys, cc)  # chain-major: matches fold
+
+        def run_chunk(state, start, n):
+            return mh_ops.mh_sample_fused(
+                target.table, state, k0c, k1c, n_steps=n, t0=step0 + start,
+                nbits=nbits, p_bfr=backend.p_bfr, cc=cc, block_c=block_c,
+            )
+    else:
+
+        def run_chunk(state, start, n):
+            flips, u = jax.vmap(
+                lambda k: backend.chunk(k, step0 + start, n, (b, cc), nbits)
+            )(keys)
+            return mh_ops.mh_sample(
+                target.table, state, _chains_fold_mh(flips),
+                _chains_fold_mh(u), nbits=nbits, block_c=block_c,
+            )
 
     samples, acc, state = _drive_pallas_chunks(
         run_chunk, state0, n_steps, chunk, step0, collect
@@ -566,19 +630,29 @@ def _run_pallas_gibbs_chains(
     c_chains, b, h, w = init.shape
     state0 = init.astype(jnp.uint32).reshape(c_chains * b, h, w)
 
-    def run_chunk(state, start, n):
-        u = jax.vmap(
-            lambda k: backend.chunk(
-                k, step0 + start, n, (b, h, w), 1, need_flips=False
-            )[1]
-        )(keys)
-        u_fold = jnp.transpose(u, (1, 0, 2, 3, 4)).reshape(
-            n, c_chains * b, h, w
-        )
-        return gibbs_ops.gibbs_sweep(
-            state, u_fold, logit_fn, parity0=(step0 + start) % 2,
-            consts=consts,
-        )
+    if backend.name == "fused":
+        k0b, k1b = _fused_key_cols(keys, b)  # chain-major: matches fold
+
+        def run_chunk(state, start, n):
+            return gibbs_ops.gibbs_sweep_fused(
+                state, k0b, k1b, logit_fn, n_steps=n, t0=step0 + start,
+                lat_b=b, consts=consts,
+            )
+    else:
+
+        def run_chunk(state, start, n):
+            u = jax.vmap(
+                lambda k: backend.chunk(
+                    k, step0 + start, n, (b, h, w), 1, need_flips=False
+                )[1]
+            )(keys)
+            u_fold = jnp.transpose(u, (1, 0, 2, 3, 4)).reshape(
+                n, c_chains * b, h, w
+            )
+            return gibbs_ops.gibbs_sweep(
+                state, u_fold, logit_fn, parity0=(step0 + start) % 2,
+                consts=consts,
+            )
 
     samples, acc, state = _drive_pallas_chunks(
         run_chunk, state0, n_steps, chunk, step0, collect

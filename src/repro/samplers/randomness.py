@@ -6,29 +6,39 @@ One MH step consumes two random operands per chain (paper Fig. 14):
     Bernoulli(p_BFR) — the block-wise pseudo-read proposal, and
   * a uniform ``u`` in [0, 1) — the accurate-[0,1]-RNG accept threshold.
 
-Two backends implement the same ``RandomnessBackend`` protocol:
+Three backends implement the same ``RandomnessBackend`` protocol
+(DESIGN.md §Randomness):
 
-  * ``HostRandomness`` — plain ``jax.random``: ideal float32 uniforms and
+  * ``HostRandomness``  — plain ``jax.random``: ideal float32 uniforms and
     directly-drawn Bernoulli bit-planes.  The software baseline.
-  * ``CIMRandomness``  — the paper's circuit pipeline: biased pseudo-read
+  * ``CIMRandomness``   — the paper's circuit pipeline: biased pseudo-read
     bit-planes (``bitcell.raw_random_words``) for the proposal, and
     reset -> pseudo-read -> MSXOR-fold -> pack for ``u``
     (``uniform_rng.uniform``), including the residual debias error.
+  * ``FusedRandomness`` — the paper's *placement*: the random bits are
+    generated inside the thing doing the sampling.  Under pallas
+    execution the fused kernels derive every operand in-kernel from a
+    counter cipher (kernels/rng) keyed on ``(chain key, absolute step,
+    site)`` — zero per-step operand traffic; this backend's ``chunk`` is
+    the scan-side *reference* that draws the identical stream through
+    the same shared functions, so {scan, pallas} stay bit-exact.
 
 Chunked streaming contract (DESIGN.md §2): the operands for step ``t``
-depend only on ``(key, t)`` — each step derives its own key via
-``jax.random.fold_in(key, t)`` — so a chain may be generated in chunks of
-any size and the resulting stream is *bit-identical* to the monolithic
-(K, B, C) materialisation.  Long chains are therefore memory-bounded by
-the chunk size, not the chain length.
+depend only on ``(key, t)`` — host/cim derive per-step keys via
+``jax.random.fold_in(key, t)``, fused folds ``t`` into the counter
+cipher — so a chain may be generated in chunks of any size and the
+resulting stream is *bit-identical* to the monolithic (K, B, C)
+materialisation.  Long chains are therefore memory-bounded by the chunk
+size, not the chain length.
 
 Operand-lean mode (DESIGN.md §Collection): consumers that never read the
 flip words — the Gibbs update rule draws no proposal, and the tempering
 swap test needs only a uniform — pass ``need_flips=False`` and the
 backend skips flip-plane generation entirely.  The u stream stays
-*bit-identical* because both backends split the step key into
-``(k_flip, k_u)`` before any drawing: ``k_u`` does not depend on whether
-``k_flip`` was ever consumed (asserted in tests/test_collection.py).
+*bit-identical* because every backend separates the operand streams
+before drawing: host/cim split the step key into ``(k_flip, k_u)``,
+fused salts the counter per operand — neither depends on whether the
+flip stream was ever consumed (asserted in tests/test_collection.py).
 """
 
 from __future__ import annotations
@@ -40,6 +50,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bitcell, uniform_rng
+from repro.kernels import rng
 
 Array = jnp.ndarray
 
@@ -144,6 +155,43 @@ class CIMRandomness:
         return out if need_flips else (None, out)
 
 
+@dataclasses.dataclass(frozen=True)
+class FusedRandomness:
+    """In-kernel counter RNG — the scan-side reference stream.
+
+    The stream contract (kernels/rng): operand for (chain, step t, site
+    s) = Threefry-2x32 of the ``(t, s)`` counter under the chain key's
+    two uint32 words, salted per operand.  Under pallas execution the
+    fused kernels make exactly these draws *inside* the kernel — no
+    operand tensors exist; this ``chunk`` materialises the identical
+    values through the same shared functions for the scan executors
+    (and for the tempering swap test), keeping the engine's bit-parity
+    contract alive across {scan, pallas} (tests/test_fused_rng.py).
+    """
+
+    p_bfr: float = 0.45
+
+    name = "fused"
+
+    def chunk(self, key, start, n_steps, shape, nbits, need_flips=True):
+        k0, k1 = rng.key_words(key)
+        site = rng.site_index(shape)
+        p_u32 = rng.threshold_u32(self.p_bfr)
+
+        def one(t):
+            s0, s1 = rng.step_key(k0, k1, t)
+            u = rng.uniform_at(s0, s1, site)
+            if not need_flips:
+                return u
+            return rng.flips_at(s0, s1, site, nbits, p_u32), u
+
+        ts = jnp.asarray(start, jnp.int32) + jnp.arange(
+            n_steps, dtype=jnp.int32
+        )
+        out = jax.vmap(one)(ts)
+        return out if need_flips else (None, out)
+
+
 def make_randomness_backend(
     name: str,
     p_bfr: float,
@@ -160,4 +208,8 @@ def make_randomness_backend(
             rng_bit_width=rng_bit_width,
             rng_stages=rng_stages,
         )
-    raise ValueError(f"unknown randomness backend {name!r} (host|cim)")
+    if name == "fused":
+        return FusedRandomness(p_bfr=p_bfr)
+    raise ValueError(
+        f"unknown randomness backend {name!r} (host|cim|fused)"
+    )
