@@ -1,0 +1,98 @@
+"""Serving-tier throughput/latency: requests/s and p50/p99 vs slots x backend.
+
+The serving question is orthogonal to raw chain throughput: how many
+*requests* per second does the packed executor deliver, and what latency
+does a request see, as the slot pool widens and the randomness backend
+changes (host jax.random vs the CIM pipeline vs fused in-kernel
+counters)?  Each cell serves a closed burst of ``2 x slots`` identical
+requests (so the FIFO overflow path and slot reuse are exercised) on the
+GMM posterior workload under scan execution, after a warm-up burst that
+pays the compile.
+
+Row semantics: ``site_steps_per_s`` is total chain work / wall (the
+regression gate's normalised throughput field, comparable with the
+workloads table); ``requests_per_s`` and the latency percentiles come
+from ``repro.serving.latency_summary`` over the measured burst only.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.bench_workloads import machine_calibration
+from repro.serving import Scheduler, ServeRequest, latency_summary
+
+WORKLOAD = "gmm"  # MH + table target: every randomness backend applies
+
+
+def _serve_cell(
+    slots: int, randomness: str, n_steps: int, smoke: bool
+) -> dict:
+    n_requests = 2 * slots
+    sched = Scheduler(
+        n_slots=slots, randomness=randomness, execution="scan", smoke=smoke
+    )
+    # warm-up burst: compiles the packed advance traces for this slot
+    # count (the measured burst replays the same (seg, collect) set)
+    warm = [
+        ServeRequest(
+            rid=-1 - i, workload=WORKLOAD, n_steps=n_steps, seed=1000 + i
+        )
+        for i in range(n_requests)
+    ]
+    sched.serve(warm)
+
+    now = sched.clock()
+    reqs = [
+        ServeRequest(
+            rid=i, workload=WORKLOAD, n_steps=n_steps, seed=i, t_arrive=now
+        )
+        for i in range(n_requests)
+    ]
+    t0 = time.perf_counter()
+    sched.serve(reqs)
+    wall_s = time.perf_counter() - t0
+
+    ex = sched.executors[WORKLOAD]
+    n_sites = 1
+    for d in ex.state_shape:
+        n_sites *= d
+    site_steps = n_requests * n_steps * n_sites
+    return {
+        "workload": WORKLOAD,
+        "update": ex.engine.config.update,
+        "slots": slots,
+        "randomness": randomness,
+        "backend": "scan",
+        "n_requests": n_requests,
+        "n_steps": n_steps,
+        "collect": "last",
+        "wall_s": round(wall_s, 3),
+        "site_steps_per_s": round(site_steps / max(wall_s, 1e-9), 1),
+        "calib_steps_per_s": round(machine_calibration(), 1),
+        **{
+            k: v
+            for k, v in latency_summary(reqs).items()
+            if k != "n_requests"  # already a config key
+        },
+    }
+
+
+def presets(smoke: bool = False):
+    """(slots, randomness) grid; smoke trims the pool sizes for CI."""
+    slot_sizes = (1, 4) if smoke else (1, 4, 16)
+    backends = ("host", "cim", "fused")
+    return [(s, r) for s in slot_sizes for r in backends]
+
+
+def run(smoke: bool = False) -> list[dict]:
+    n_steps = 64 if smoke else 512
+    return [
+        _serve_cell(slots, randomness, n_steps, smoke)
+        for slots, randomness in presets(smoke)
+    ]
+
+
+if __name__ == "__main__":
+    for row in run(smoke=True):
+        print("  ".join(f"{k}={v}" for k, v in row.items()))

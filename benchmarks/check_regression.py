@@ -53,6 +53,13 @@ MEASURED_FIELDS = frozenset({
     "best_energy",
     "steps_to_ground",
     "time_to_ground_s",
+    # serving table (benchmarks/bench_serving.py): request-level
+    # throughput/latency ride along; the gate still normalises on
+    # site_steps_per_s like every other row
+    "requests_per_s",
+    "p50_latency_s",
+    "p99_latency_s",
+    "mean_wait_s",
 })
 
 THROUGHPUT_FIELD = "site_steps_per_s"

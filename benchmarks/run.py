@@ -42,6 +42,7 @@ MODULES = [
     ("chain_scaling", "benchmarks.bench_chain_scaling"),
     ("tempering", "benchmarks.bench_tempering"),
     ("collection", "benchmarks.bench_collection"),
+    ("serving", "benchmarks.bench_serving"),
 ]
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

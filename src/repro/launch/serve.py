@@ -1,11 +1,13 @@
 """Slot-based batched serving with CIM-MCMC token sampling.
 
-A fixed pool of ``n_slots`` decode slots shares one KV cache; requests
+A fixed pool of ``--slots`` decode slots shares one KV cache; requests
 join free slots (their prompt is prefilled into the slot's cache rows),
 decode steps advance *all* active slots in lock-step, finished slots free
-up.  Tokens are drawn either by the paper's MCMC sampler (softmax-free —
-the default, this is the paper's technique in serving position) or by
-standard categorical sampling (baseline).
+up and are refilled from a FIFO overflow queue (``--requests`` may exceed
+the pool).  The decode index is per-row, so slots hold prompts of
+different lengths.  Tokens are drawn either by the paper's MCMC sampler
+(softmax-free — the default, this is the paper's technique in serving
+position) or by standard categorical sampling (baseline).
 
 This is the batch-continuous ("continuous batching"-lite) discipline real
 LLM servers use, sized down to run on CPU with smoke configs; the decode
@@ -34,6 +36,7 @@ import numpy as np
 from repro import configs
 from repro.core import token_sampler
 from repro.models import lm
+from repro.serving import FIFOQueue
 
 
 @dataclasses.dataclass
@@ -77,8 +80,11 @@ class BatchedServer:
             temperature=serve_cfg.temperature,
             execution=serve_cfg.backend,
         )
-        # slot state
+        # slot state; the decode index is per-row (B,) so slots sit at
+        # their own positions — heterogeneous prompt lengths pack safely
+        # (cache contract: models/lm.py)
         self.cache = lm.init_cache(cfg, serve_cfg.n_slots, serve_cfg.max_len)
+        self.cache["index"] = jnp.zeros((serve_cfg.n_slots,), jnp.int32)
         self.slot_req: list[Request | None] = [None] * serve_cfg.n_slots
         self.slot_remaining = np.zeros(serve_cfg.n_slots, dtype=int)
         self.last_tokens = jnp.zeros((serve_cfg.n_slots, 1), jnp.int32)
@@ -114,10 +120,13 @@ class BatchedServer:
         self.cache["layers"] = jax.tree.map(
             splice, self.cache["layers"], row_cache["layers"]
         )
-        # shared decode index = max over active slots; pad slots align because
-        # all requests here share prompt_len (slot-local indices would need a
-        # per-row index — supported by the model via (B,)-shaped cache index)
-        self.cache["index"] = row_cache["index"]
+        # only this slot's decode position moves — other slots keep
+        # decoding at their own indices mid-flight
+        self.cache["index"] = (
+            self.cache["index"].at[slot].set(
+                jnp.asarray(row_cache["index"], jnp.int32)
+            )
+        )
         return logits[0]
 
     def submit(self, slot: int, req: Request):
@@ -146,22 +155,35 @@ class BatchedServer:
 
     # --- decode loop ------------------------------------------------------------
 
-    def step(self):
-        """One lock-step decode across all active slots."""
+    def step(self) -> list[Request]:
+        """One lock-step decode across all active slots; finished
+        requests free their slot and are returned (continuous batching:
+        the caller refills freed slots from its overflow queue)."""
         logits, self.cache = self._decode(self.vals, self.last_tokens, self.cache)
         tokens = self._sample(logits)
+        done = []
         for slot, req in enumerate(self.slot_req):
-            if req is None or self.slot_remaining[slot] <= 0:
+            if req is None:
                 continue
             tok = int(tokens[slot])
             req.out_tokens.append(tok)
             self.slot_remaining[slot] -= 1
             if self.slot_remaining[slot] == 0:
                 req.t_done = time.time()
+                self.slot_req[slot] = None
+                done.append(req)
         self.last_tokens = tokens[:, None]
+        return done
+
+    def free_slot(self) -> int | None:
+        """Lowest free slot index, or None when the pool is full."""
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                return slot
+        return None
 
     def active(self) -> int:
-        return int((self.slot_remaining > 0).sum())
+        return sum(req is not None for req in self.slot_req)
 
 
 def main():
@@ -169,6 +191,11 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument(
+        "--slots", type=int, default=None,
+        help="decode slot pool size (default min(requests, 4)); overflow "
+        "requests wait in a FIFO and join as slots free up",
+    )
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--sampler", default="mcmc", choices=["mcmc", "categorical", "greedy"])
@@ -188,9 +215,11 @@ def main():
         if args.smoke
         else configs.get_config(args.arch)
     )
+    n_slots = args.slots if args.slots is not None else min(args.requests, 4)
     scfg = ServeConfig(
-        n_slots=args.requests,
-        max_len=args.prompt_len + args.gen + 8,
+        n_slots=n_slots,
+        # prompts jitter up to +2 tokens below; size the cache for the max
+        max_len=args.prompt_len + 2 + args.gen + 8,
         gen_tokens=args.gen,
         sampler=args.sampler,
         backend=args.backend,
@@ -198,27 +227,33 @@ def main():
     )
     server = BatchedServer(cfg, scfg)
     rng = np.random.default_rng(args.seed)
-    t0 = time.time()
+    # heterogeneous prompt lengths — the per-row decode index packs them
+    queue = FIFOQueue()
     for rid in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab_size, size=args.prompt_len)
-        server.submit(rid, Request(rid=rid, prompt=prompt))
-    while server.active():
-        server.step()
+        plen = args.prompt_len + (rid % 3)
+        prompt = rng.integers(0, cfg.vocab_size, size=plen)
+        queue.push(Request(rid=rid, prompt=prompt))
+    finished: list[Request] = []
+    t0 = time.time()
+    while queue or server.active():
+        while queue:
+            slot = server.free_slot()
+            if slot is None:
+                break
+            server.submit(slot, queue.pop_ready())
+        finished.extend(server.step())
     dt = time.time() - t0
-    total_tokens = sum(
-        len(r.out_tokens) for r in server.slot_req if r is not None
-    )
+    total_tokens = sum(len(r.out_tokens) for r in finished)
     backend_note = f", backend={args.backend}" if args.sampler == "mcmc" else ""
     print(
-        f"[serve] {args.requests} requests x {args.gen} tokens "
-        f"({args.sampler}{backend_note}): {total_tokens} tokens in {dt:.2f}s "
-        f"({total_tokens / dt:.1f} tok/s)"
+        f"[serve] {args.requests} requests x {args.gen} tokens on "
+        f"{n_slots} slots ({args.sampler}{backend_note}): {total_tokens} "
+        f"tokens in {dt:.2f}s ({total_tokens / dt:.1f} tok/s)"
     )
     if server.acceptance:
         print(f"[serve] MCMC acceptance rate: {np.mean(server.acceptance):.3f}")
-    for r in server.slot_req:
-        if r is not None:
-            print(f"  req {r.rid}: {r.out_tokens[:8]}...")
+    for r in finished:
+        print(f"  req {r.rid}: {r.out_tokens[:8]}...")
 
 
 if __name__ == "__main__":

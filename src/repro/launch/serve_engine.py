@@ -1,0 +1,164 @@
+"""Serve concurrent MCMC sampling requests on the packed chain engine.
+
+The serving face of the sampler (DESIGN.md §Serving): heterogeneous
+requests — each a (workload, n_steps, seed, collect) tuple — are packed
+into the chain axis of one engine program by ``repro.serving``.
+Admission and retirement happen between ``chunk_steps`` segments via the
+engine's ``step0`` resume axis, so every request's sample stream is
+bit-identical to its solo ``launch.sample``-style run no matter when it
+joined or who shared the batch.
+
+Requests come from a JSONL spec (one object per line with any of
+``rid / workload / n_steps / seed / collect / t_arrive``) or from a
+synthetic Poisson arrival generator (``--poisson-rate`` arrivals/s,
+seeds 0..N-1).  Arrival gaps are fast-forwarded by default; pass
+``--realtime`` to sleep through them.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve_engine --smoke \
+      --requests 6 --slots 3 --poisson-rate 50
+  PYTHONPATH=src python -m repro.launch.serve_engine --smoke \
+      --workload gmm --requests 8 --slots 4 --randomness fused \
+      --collect thin:4
+  PYTHONPATH=src python -m repro.launch.serve_engine --spec requests.jsonl
+
+Per-request lines report wait/latency and the accept (MH) or flip
+(Gibbs) rate; the footer is the ``latency_summary`` row (requests/s,
+p50/p99 latency) that ``benchmarks.bench_serving`` tables.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro import workloads
+from repro.serving import Scheduler, ServeRequest, latency_summary
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="repro.launch.serve_engine",
+        description="Serve sampling requests packed into one engine program.",
+    )
+    p.add_argument(
+        "--workload", default="ising", choices=sorted(workloads.WORKLOADS),
+        help="workload for synthetic requests (JSONL specs name their own)",
+    )
+    p.add_argument(
+        "--randomness", default="cim", choices=("host", "cim", "fused")
+    )
+    p.add_argument(
+        "--backend", default="scan", choices=("auto", "scan", "pallas"),
+        help="engine execution: scan packs all slots into one vmapped "
+        "program (traced step0); pallas runs one fused program per slot "
+        "(static step0)",
+    )
+    p.add_argument("--smoke", action="store_true", help="tiny sizes for CI")
+    p.add_argument("--slots", type=int, default=4, help="packed slot pool")
+    p.add_argument(
+        "--requests", type=int, default=8,
+        help="synthetic request count (overflow waits in the FIFO)",
+    )
+    p.add_argument(
+        "--steps", type=int, default=None,
+        help="steps per synthetic request (default: workload default)",
+    )
+    p.add_argument(
+        "--collect", default="last",
+        help="collection mode for synthetic requests: all | thin:<k> | "
+        "last (the serving default — O(state) memory)",
+    )
+    p.add_argument(
+        "--chunk-steps", type=int, default=None,
+        help="admission/retirement granularity (default: engine chunk)",
+    )
+    p.add_argument(
+        "--poisson-rate", type=float, default=0.0,
+        help="mean synthetic arrivals/s (0 = all requests arrive at t=0)",
+    )
+    p.add_argument(
+        "--spec", default=None, metavar="PATH",
+        help="JSONL request spec; overrides the synthetic generator",
+    )
+    p.add_argument(
+        "--realtime", action="store_true",
+        help="sleep through arrival gaps instead of fast-forwarding",
+    )
+    p.add_argument("--seed", type=int, default=0, help="arrival-process seed")
+    return p
+
+
+def load_spec(path: str) -> list[ServeRequest]:
+    """Requests from a JSONL file, one object per line; missing fields
+    take the ``ServeRequest`` defaults, ``rid`` defaults to the line
+    number."""
+    requests = []
+    with open(path) as f:
+        for i, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            obj = json.loads(line)
+            obj.setdefault("rid", i)
+            requests.append(ServeRequest(**obj))
+    return requests
+
+
+def poisson_requests(args) -> list[ServeRequest]:
+    """N synthetic requests with Poisson arrivals (exponential gaps at
+    ``--poisson-rate``; rate 0 = a burst at t=0) and seeds 0..N-1."""
+    rng = np.random.default_rng(args.seed)
+    t = 0.0
+    requests = []
+    for rid in range(args.requests):
+        if args.poisson_rate > 0:
+            t += float(rng.exponential(1.0 / args.poisson_rate))
+        requests.append(
+            ServeRequest(
+                rid=rid,
+                workload=args.workload,
+                n_steps=args.steps,
+                seed=rid,
+                collect=args.collect,
+                t_arrive=t,
+            )
+        )
+    return requests
+
+
+def main(argv=None) -> dict:
+    args = build_parser().parse_args(argv)
+    requests = (
+        load_spec(args.spec) if args.spec else poisson_requests(args)
+    )
+    sched = Scheduler(
+        n_slots=args.slots,
+        randomness=args.randomness,
+        execution=args.backend,
+        smoke=args.smoke,
+        chunk_steps=args.chunk_steps,
+    )
+    done = sched.serve(requests, realtime=args.realtime)
+    for r in sorted(done, key=lambda r: r.rid):
+        n_kept = 0 if r.samples is None else r.samples.shape[0]
+        print(
+            f"  req {r.rid}: workload={r.workload} steps="
+            f"{r.n_steps or 'default'} collect={r.collect} kept={n_kept} "
+            f"wait_s={r.wait_s:.3f} latency_s={r.latency_s:.3f} "
+            f"{r.rate_label}={r.acceptance_rate:.4f}"
+        )
+    row = {
+        "slots": args.slots,
+        "randomness": args.randomness,
+        "backend": args.backend,
+        **latency_summary(done),
+    }
+    print("[serve_engine] " + "  ".join(f"{k}={v}" for k, v in row.items()))
+    return row
+
+
+if __name__ == "__main__":
+    main()

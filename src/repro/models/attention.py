@@ -190,20 +190,24 @@ def decode_attention(q, k_cache, v_cache, *, index, window):
 
     q: (B, 1, KV, R, dh); index = number of valid cache entries (q is at
     position index - 1 ... the cache already contains this step's k/v).
+    ``index`` is a scalar (all rows at the same position) or a (B,)
+    per-row index — the slot-local positions a continuous-batching
+    server needs when sequences of different lengths share the cache.
     """
     b, _, kvh, r, dh = q.shape
     smax = k_cache.shape[1]
     scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
     qt = q[:, 0]  # (B, KV, R, dh)
     pos = jnp.arange(smax)
-    q_pos = index - 1
-    valid = pos < index
+    idx = jnp.broadcast_to(jnp.asarray(index), (b,))  # scalar -> per-row
+    q_pos = idx - 1
+    valid = pos[None, :] < idx[:, None]  # (B, Smax)
     if window is not None:
-        valid &= (q_pos - pos) < window
+        valid &= (q_pos[:, None] - pos[None, :]) < window
     s = jnp.einsum(
         "bkrd,bskd->bkrs", qt, k_cache, preferred_element_type=jnp.float32
     ) * scale
-    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum(
         "bkrs,bskd->bkrd", p.astype(v_cache.dtype), v_cache,
@@ -301,14 +305,28 @@ def attention(
             return shard(t, ("batch", "cache_seq", "kv_heads", "head_dim"))
 
         if not cross:
-            # append this step's k/v at cache index
+            # append this step's k/v at cache index; a (B,) per-row index
+            # writes each row at its own position (heterogeneous prompt
+            # lengths sharing one slot cache)
             idx = cache_index
-            k_cache = jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0)
-            )
-            v_cache = jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0)
-            )
+            if getattr(idx, "ndim", 0) == 1:
+
+                def row_update(c, u, i):
+                    return jax.vmap(
+                        lambda cr, ur, ir: jax.lax.dynamic_update_slice(
+                            cr, ur.astype(cr.dtype), (ir, 0, 0)
+                        )
+                    )(c, u, i)
+
+                k_cache = row_update(cache["k"], k, idx)
+                v_cache = row_update(cache["v"], v, idx)
+            else:
+                k_cache = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0)
+                )
+                v_cache = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0)
+                )
             new_cache = {"k": k_cache, "v": v_cache}
             out = decode_attention(
                 q_dec, cache_shard(k_cache), cache_shard(v_cache),

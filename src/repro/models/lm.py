@@ -10,9 +10,12 @@ Param trees carry logical sharding axes (``Annotated`` leaves from
 ``repro.models.layers``); ``abstract_params`` yields the allocation-free
 (ShapeDtypeStruct, axes) pair the multi-pod dry-run lowers against.
 
-Cache contract: ``{"index": int32 scalar, "layers": <stacked per-layer>}``
-(+ audio keeps cross K/V inside the per-layer tree).  The stacked leaves
-lead with the layer axis so decode scans slice them per layer.
+Cache contract: ``{"index": int32 scalar or (B,) per-row, "layers":
+<stacked per-layer>}`` (+ audio keeps cross K/V inside the per-layer
+tree).  The stacked leaves lead with the layer axis so decode scans
+slice them per layer.  A per-row index lets rows sit at different cache
+depths — the slot-local positions continuous-batching serving needs for
+heterogeneous prompt lengths (launch/serve.py).
 """
 
 from __future__ import annotations
@@ -312,7 +315,9 @@ def lm_forward(vals, cfg, batch, *, mode: str, cache=None):
 
     s_total = x.shape[1]
     if mode == "decode":
-        positions = index + jnp.arange(s_tok)
+        # scalar index -> (s_tok,) positions; per-row (B,) index -> (B,
+        # s_tok), so rows at different cache depths decode in one batch
+        positions = jnp.asarray(index)[..., None] + jnp.arange(s_tok)
     else:
         positions = jnp.arange(s_total)
 

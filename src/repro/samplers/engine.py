@@ -294,12 +294,17 @@ def _run_scan_chunked(make_xs, step_fn, carry, n_steps, chunk, step0, collect):
 
 
 def _run_scan(
-    key, target, backend, nbits, n_steps, chunk, step0, init_words, collect
+    key, target, backend, nbits, n_steps, chunk, step0, init_words, collect,
+    init_logp=None,
 ):
     shape = init_words.shape
+    words0 = init_words.astype(jnp.uint32)
+    logp0 = (
+        target.log_prob(words0) if init_logp is None else init_logp
+    )
     carry = (
-        init_words.astype(jnp.uint32),
-        target.log_prob(init_words.astype(jnp.uint32)).astype(jnp.float32),
+        words0,
+        logp0.astype(jnp.float32),
         jnp.zeros(shape, jnp.int32),
     )
 
@@ -715,6 +720,7 @@ class MHEngine:
     def run(
         self, key, target, n_steps: int, init_words, *,
         chain_id: int = 0, mesh=None, step0=0, collect: str | None = None,
+        init_logp=None,
     ) -> EngineResult:
         """Run ``n_steps`` of the configured update rule from
         ``init_words``; keep what ``collect`` says (default: every state).
@@ -729,6 +735,14 @@ class MHEngine:
         ``samples`` is a (0, *chain_shape) placeholder.  The chain
         dynamics are identical in all three modes.  ``"thin:<k>"``
         requires a concrete ``step0`` (the kept count is shape-static).
+
+        ``init_logp`` (solo MH scan only) seeds the carried log-prob
+        instead of re-evaluating ``target.log_prob(init_words)`` — pass
+        the previous segment's ``final_logp`` when resuming so segmented
+        runs touch the target exactly once per step, like an unsegmented
+        run (the serving tier's donated-carry contract, DESIGN.md
+        §Serving).  It must equal ``target.log_prob(init_words)``;
+        nothing is re-checked.
 
         ``step0`` offsets the randomness stream (and the Gibbs
         checkerboard parity) by an absolute step count: operands for
@@ -768,6 +782,14 @@ class MHEngine:
         if isinstance(step0, int) and step0 < 0:
             raise ValueError(f"step0 must be >= 0, got {step0}")
         collect = self._parse_collect(collect, step0)
+        if init_logp is not None and (
+            self.config.num_chains > 1 or self.config.update == "gibbs"
+        ):
+            raise ValueError(
+                "init_logp resumes the solo MH carry only — the Gibbs "
+                "carry holds no log-prob and the chains axis derives its "
+                "own per-chain carries"
+            )
         if self.config.num_chains > 1:
             return self._run_chains(
                 key, target, n_steps, init_words, mesh, base=chain_id,
@@ -782,8 +804,15 @@ class MHEngine:
         args = (key, target, self._backend, target.nbits, n_steps,
                 self.config.chunk_steps, step0)
         if execution == "scan":
-            samples, acc, words, logp = _run_scan(*args, init_words, collect)
+            samples, acc, words, logp = _run_scan(
+                *args, init_words, collect, init_logp
+            )
         else:
+            if init_logp is not None:
+                raise ValueError(
+                    "init_logp needs scan execution — the pallas MH kernel "
+                    "re-derives the table log-prob from the state words"
+                )
             samples, acc, words, logp = _run_pallas(
                 *args, self.config.block_c, init_words, collect
             )

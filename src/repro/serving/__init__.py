@@ -1,0 +1,39 @@
+"""Continuous-batching MCMC serving tier (DESIGN.md §Serving).
+
+The first subsystem whose unit of work is a *request*, not a chain: a
+sampling request names a workload, a step budget, a seed and a
+collection mode, and the serving tier packs concurrent requests into the
+chain axis of one engine program.  Three layers:
+
+  * ``scheduler``  — the request queue + slot assignment
+    (``ServeRequest``, ``FIFOQueue``, ``Scheduler``): requests wait in
+    FIFO order, join free slots of the executor serving their workload,
+    and retire between chunks.
+  * ``executor``   — the packed batch program (``PackedExecutor``): all
+    slots advance ``chunk_steps`` in one device program; per-slot
+    ``step0`` offsets keep every request's randomness stream exactly the
+    stream of its solo run, so joining mid-flight is bit-exact.
+  * ``dispatch``   — host/device overlap (``make_advance_fn``,
+    ``SegmentPipeline``): the carried (words, logp) state is donated to
+    the next segment while retirement bookkeeping for the previous one
+    runs on the host.
+
+Entry points: ``python -m repro.launch.serve_engine`` (CLI) and
+``benchmarks.bench_serving`` (requests/s + latency percentiles).
+"""
+
+from repro.serving.executor import PackedExecutor
+from repro.serving.scheduler import (
+    FIFOQueue,
+    Scheduler,
+    ServeRequest,
+    latency_summary,
+)
+
+__all__ = [
+    "FIFOQueue",
+    "PackedExecutor",
+    "Scheduler",
+    "ServeRequest",
+    "latency_summary",
+]

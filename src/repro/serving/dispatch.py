@@ -1,0 +1,112 @@
+"""Host/device overlap for the packed executor (DESIGN.md §Serving).
+
+Two pieces:
+
+  * ``make_advance_fn`` builds the jitted packed-segment program: a vmap
+    of ``engine.run`` over the slot axis, with per-slot request keys and
+    per-slot *traced* ``step0`` offsets (the scan executors accept traced
+    stream offsets, so slots at different absolute steps advance in one
+    device program).  The carried chain state is donated —
+    ``donate_argnums`` on ``(words, logp)`` for the MH update (whose scan
+    carry holds both) and on ``words`` for Gibbs — so segment k+1's
+    output reuses segment k's allocation instead of growing the heap
+    with the slot pool.
+  * ``SegmentPipeline`` bounds how far host-side finalisation may lag
+    the device.  The executor pushes one finalize thunk per segment
+    (with all needed device slices already enqueued); the pipeline runs
+    the oldest thunk only once more than ``depth`` segments are in
+    flight, so the host converts/retires segment k's results while the
+    device runs segment k+1 — JAX's async dispatch does the actual
+    overlapping, the pipeline just keeps the lag bounded.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from functools import partial
+
+import jax
+
+
+def make_advance_fn(engine, target):
+    """The packed-segment program for one (engine, target) pair.
+
+    Returns ``advance(words, logp, keys, step0s, *, seg, collect)`` ->
+    ``(samples, words', logp', accept)``, each with a leading slot axis.
+    ``seg`` (segment length) and ``collect`` are jit-static — a serving
+    run touches only a handful of (seg, collect) signatures, and within
+    one signature every segment reuses the same trace.
+
+    Slot s runs ``engine.run(keys[s], target, seg, words[s],
+    step0=step0s[s])`` — the exact solo-run call — so the packed batch
+    is bit-identical to per-request solo runs (the §Chains-axis vmap
+    argument, with per-request keys instead of counter-derived ones).
+    """
+    carry_logp = engine.config.update == "mh"
+
+    if carry_logp:
+        # the scan MH carry holds (words, logp): donate both, and hand
+        # the carried logp back to the engine so the segment boundary
+        # skips the target re-evaluation (engine.run ``init_logp``)
+        @partial(
+            jax.jit,
+            static_argnames=("seg", "collect"),
+            donate_argnums=(0, 1),
+        )
+        def advance(words, logp, keys, step0s, *, seg, collect):
+            def one(k, w, lp, s0):
+                res = engine.run(
+                    k, target, seg, w, step0=s0, collect=collect,
+                    init_logp=lp,
+                )
+                return (
+                    res.samples, res.final_words, res.final_logp,
+                    res.accept_count,
+                )
+
+            return jax.vmap(one)(keys, words, logp, step0s)
+
+    else:
+        # the Gibbs carry holds only the lattice words; final_logp is
+        # the conditional log-prob of the final state, recomputed by the
+        # engine — the logp argument rides along unread for a uniform
+        # executor-side calling convention
+        @partial(
+            jax.jit, static_argnames=("seg", "collect"), donate_argnums=(0,)
+        )
+        def advance(words, logp, keys, step0s, *, seg, collect):
+            del logp
+
+            def one(k, w, s0):
+                res = engine.run(k, target, seg, w, step0=s0, collect=collect)
+                return (
+                    res.samples, res.final_words, res.final_logp,
+                    res.accept_count,
+                )
+
+            return jax.vmap(one)(keys, words, step0s)
+
+    return advance
+
+
+class SegmentPipeline:
+    """Run host finalize thunks at most ``depth`` segments behind the
+    device.  ``push`` defers the thunk; once more than ``depth`` are
+    pending the oldest runs (blocking on its device values only then).
+    ``drain`` flushes everything — call it when the serve loop idles or
+    ends."""
+
+    def __init__(self, depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"pipeline depth must be >= 1, got {depth}")
+        self.depth = depth
+        self._pending: deque = deque()
+
+    def push(self, thunk) -> None:
+        self._pending.append(thunk)
+        while len(self._pending) > self.depth:
+            self._pending.popleft()()
+
+    def drain(self) -> None:
+        while self._pending:
+            self._pending.popleft()()

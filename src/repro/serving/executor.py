@@ -1,0 +1,342 @@
+"""The packed batch program (DESIGN.md §Serving).
+
+``PackedExecutor`` owns ``n_slots`` request slots and advances them in
+lock-step ``chunk_steps`` segments.  Admission and retirement happen
+only **between** chunks, and the packed batch is bit-identical to solo
+runs because each slot replays exactly the solo call:
+
+  * slot state is the engine carry ``(words, logp)`` with a leading
+    slot axis, donated segment-to-segment (serving/dispatch.py);
+  * each slot streams from its *request's* key (``PRNGKey(seed)`` split
+    exactly as ``launch.sample`` does), so the stream belongs to the
+    request, never to the slot — slot reuse after retirement is safe by
+    construction;
+  * each slot carries its absolute step as the engine's ``step0`` resume
+    offset; the scan executors take it traced, so slots at different
+    absolute steps advance in one device program, and a request joining
+    mid-flight continues the exact stream its solo run would produce.
+
+Per-request collection: the segment program collects ``"all"`` iff any
+active request keeps samples (else ``"last"`` — O(state) memory); a
+``thin:k`` request then keeps the static strided slice of its slot's
+rows on *absolute* steps ``(step0 + t) % k == 0``, bit-identical to the
+engine's own ``thin`` stream (DESIGN.md §Collection).  Pallas execution
+bakes chunk schedules and Gibbs parity statically, so that path runs
+one solo ``engine.run`` per active slot with a concrete ``step0``
+instead of the vmapped single program.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import workloads
+from repro.samplers.engine import parse_collect, resolve_execution
+from repro.serving.dispatch import SegmentPipeline, make_advance_fn
+
+_DUMMY_KEY = np.zeros((2,), np.uint32)  # free slots advance discarded work
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Executor-side bookkeeping for one admitted request."""
+
+    req: object
+    remaining: int               # steps still to run
+    mode: str                    # parsed collect mode: all | thin | last
+    thin_k: int                  # stride under thin
+    progress: int = 0            # absolute step == step0 of the next segment
+    pieces: list = dataclasses.field(default_factory=list)  # device kept rows
+    acc: object = None           # device per-site accept/flip accumulator
+    final_words: object = None
+    final_logp: object = None
+
+
+class PackedExecutor:
+    """``n_slots`` heterogeneous requests packed into one engine program.
+
+    Construct via ``for_workload`` (the registry path the scheduler
+    uses) or directly with an engine/target pair plus a
+    ``request_init(req) -> (init_words, run_key, n_steps)`` callable
+    (the hook tests use to pin exact solo references).
+    """
+
+    def __init__(
+        self,
+        engine,
+        target,
+        n_slots: int,
+        state_shape: tuple,
+        *,
+        request_init,
+        default_steps: int | None = None,
+        chunk_steps: int | None = None,
+        pipeline_depth: int = 2,
+        clock=time.perf_counter,
+    ):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        if engine.config.num_chains != 1:
+            raise ValueError(
+                "the serving tier packs requests into the batch itself — "
+                "configure the engine with num_chains=1 (got "
+                f"{engine.config.num_chains})"
+            )
+        self.engine = engine
+        self.target = target
+        self.n_slots = int(n_slots)
+        self.state_shape = tuple(state_shape)
+        self.request_init = request_init
+        self.default_steps = default_steps
+        self.chunk_steps = int(chunk_steps or engine.config.chunk_steps)
+        self.clock = clock
+        self.execution = resolve_execution(
+            engine.config.execution, target, engine.config.update
+        )
+        self.rate_label = (
+            "flip_rate" if engine.config.update == "gibbs"
+            else "acceptance_rate"
+        )
+        # the carried logp feeds engine.run(init_logp=...) only on the
+        # scan MH path; gibbs and pallas re-derive it themselves
+        self._carry_logp = (
+            engine.config.update == "mh" and self.execution == "scan"
+        )
+        self.pipeline = SegmentPipeline(pipeline_depth)
+        self._advance = (
+            make_advance_fn(engine, target) if self.execution == "scan"
+            else None
+        )
+        self._slots: list[_Slot | None] = [None] * self.n_slots
+        self._keys: list = [_DUMMY_KEY] * self.n_slots
+        self.words = jnp.zeros((self.n_slots, *self.state_shape), jnp.uint32)
+        self.logp = jnp.zeros((self.n_slots, *self.state_shape), jnp.float32)
+
+    # -- construction from the workload registry -----------------------
+    @classmethod
+    def for_workload(
+        cls,
+        name: str,
+        *,
+        n_slots: int,
+        randomness: str = "cim",
+        execution: str = "scan",
+        smoke: bool = True,
+        chunk_steps: int | None = None,
+        pipeline_depth: int = 2,
+        clock=time.perf_counter,
+        **builder_kwargs,
+    ) -> "PackedExecutor":
+        """One executor per workload *group*: engine + target built once
+        (group key 0 — for seed-dependent targets like spin_glass the
+        group fixes the problem instance), requests supply per-request
+        inits and streams.
+
+        ``request_init`` replays the solo-run derivation of
+        ``launch.sample`` exactly: ``PRNGKey(seed)`` -> split ->
+        (builder init from k_init, chain stream from k_run) — so a
+        packed request reproduces ``engine.run(k_run, target, n, init)``
+        bit-for-bit.
+        """
+        builder = workloads.WORKLOADS[name]
+        params = inspect.signature(builder).parameters
+        kwargs = {
+            k: v
+            for k, v in dict(
+                randomness=randomness,
+                backend=execution,
+                smoke=smoke,
+                **builder_kwargs,
+            ).items()
+            if k in params and v is not None
+        }
+        template = workloads.build(name, jax.random.PRNGKey(0), **kwargs)
+
+        def request_init(req):
+            key = jax.random.PRNGKey(req.seed)
+            k_init, k_run = jax.random.split(key)
+            wl = workloads.build(name, k_init, **kwargs)
+            n = req.n_steps if req.n_steps else wl.n_steps
+            return wl.init_words, k_run, n
+
+        return cls(
+            template.engine,
+            template.target,
+            n_slots,
+            tuple(template.init_words.shape),
+            request_init=request_init,
+            default_steps=template.n_steps,
+            chunk_steps=chunk_steps,
+            pipeline_depth=pipeline_depth,
+            clock=clock,
+        )
+
+    # -- slot pool ------------------------------------------------------
+    def has_free_slot(self) -> bool:
+        return any(s is None for s in self._slots)
+
+    @property
+    def active_count(self) -> int:
+        return sum(s is not None for s in self._slots)
+
+    def admit(self, req) -> int:
+        """Place a request in a free slot (between chunks only — callers
+        never see a partially-advanced admission)."""
+        try:
+            slot = next(i for i, s in enumerate(self._slots) if s is None)
+        except StopIteration:
+            raise RuntimeError("no free slot — check has_free_slot()") from None
+        init, k_run, n_steps = self.request_init(req)
+        init = jnp.asarray(init)
+        if tuple(init.shape) != self.state_shape:
+            raise ValueError(
+                f"request init shape {tuple(init.shape)} != executor state "
+                f"shape {self.state_shape} — one executor serves one "
+                f"workload group"
+            )
+        mode, k = parse_collect(req.collect)
+        words0 = init.astype(jnp.uint32)
+        self.words = self.words.at[slot].set(words0)
+        if self._carry_logp:
+            self.logp = self.logp.at[slot].set(
+                self.target.log_prob(words0).astype(jnp.float32)
+            )
+        self._keys[slot] = jnp.asarray(k_run, jnp.uint32)
+        self._slots[slot] = _Slot(
+            req=req, remaining=int(n_steps), mode=mode, thin_k=k
+        )
+        req.slot = slot
+        req.rate_label = self.rate_label
+        req.t_admit = self.clock()
+        return slot
+
+    # -- the chunk loop -------------------------------------------------
+    def advance_chunk(self) -> list:
+        """Advance every active slot one segment; returns the requests
+        that finished (their results materialise when the dispatch
+        pipeline flushes — ``drain()`` forces it)."""
+        active = [i for i, s in enumerate(self._slots) if s is not None]
+        if not active:
+            return []
+        # the segment never overshoots the shortest remaining budget, so
+        # every retirement lands exactly on a chunk boundary
+        seg = min(self.chunk_steps, *(self._slots[i].remaining for i in active))
+        if self.execution == "scan":
+            retired = self._advance_scan(active, seg)
+        else:
+            retired = self._advance_pallas(active, seg)
+        finished = []
+        if retired:
+            batch = []
+            for i in retired:
+                s = self._slots[i]
+                self._slots[i] = None          # slot free for the next admit
+                self._keys[i] = _DUMMY_KEY
+                batch.append(s)
+                finished.append(s.req)
+            self.pipeline.push(
+                lambda fs=batch: [self._finalize(s) for s in fs]
+            )
+        return finished
+
+    def _advance_scan(self, active, seg: int) -> list:
+        """One vmapped device program over all slots, traced per-slot
+        ``step0``; donated (words, logp) carry."""
+        collect = (
+            "all"
+            if any(self._slots[i].mode != "last" for i in active)
+            else "last"
+        )
+        step0s = jnp.asarray(
+            [s.progress if s else 0 for s in self._slots], jnp.int32
+        )
+        keys = jnp.stack([jnp.asarray(k, jnp.uint32) for k in self._keys])
+        samples, words, logp, acc = self._advance(
+            self.words, self.logp, keys, step0s, seg=seg, collect=collect
+        )
+        # slice retirement/collection payloads NOW — before the next
+        # segment donates (words, logp) back into the device program
+        retired = []
+        for i in active:
+            s = self._slots[i]
+            if collect == "all" and s.mode != "last":
+                if s.mode == "all":
+                    s.pieces.append(samples[i])
+                else:  # thin: static strided slice on absolute steps
+                    i0 = (-s.progress) % s.thin_k
+                    if i0 < seg:
+                        s.pieces.append(samples[i, i0::s.thin_k])
+            s.acc = acc[i] if s.acc is None else s.acc + acc[i]
+            s.progress += seg
+            s.remaining -= seg
+            if s.remaining == 0:
+                s.final_words = words[i]
+                s.final_logp = logp[i]
+                retired.append(i)
+        self.words, self.logp = words, logp
+        return retired
+
+    def _advance_pallas(self, active, seg: int) -> list:
+        """Pallas fallback: one solo ``engine.run`` per active slot.  The
+        fused kernels bake the chunk schedule and checkerboard parity
+        statically, so ``step0`` must be a concrete int per slot — the
+        slots still share the between-chunks admission contract, just
+        not a single device program."""
+        retired = []
+        words = self.words
+        for i in active:
+            s = self._slots[i]
+            collect = (
+                "all" if s.mode == "all"
+                else f"thin:{s.thin_k}" if s.mode == "thin"
+                else "last"
+            )
+            res = self.engine.run(
+                self._keys[i], self.target, seg, words[i],
+                step0=int(s.progress), collect=collect,
+            )
+            if s.mode != "last" and res.samples.shape[0]:
+                s.pieces.append(res.samples)
+            s.acc = (
+                res.accept_count if s.acc is None
+                else s.acc + res.accept_count
+            )
+            words = words.at[i].set(res.final_words)
+            s.progress += seg
+            s.remaining -= seg
+            if s.remaining == 0:
+                s.final_words = res.final_words
+                s.final_logp = res.final_logp
+                retired.append(i)
+        self.words = words
+        return retired
+
+    # -- retirement -----------------------------------------------------
+    def _finalize(self, s: _Slot) -> None:
+        """Host-side retirement: materialise the request's payload and
+        stamp delivery time.  Runs deferred through the dispatch
+        pipeline — by then the device values are usually already done."""
+        req = s.req
+        if s.pieces:
+            req.samples = np.concatenate(
+                [np.asarray(p) for p in s.pieces], axis=0
+            )
+        else:
+            req.samples = np.zeros((0, *self.state_shape), np.uint32)
+        req.final_words = np.asarray(s.final_words)
+        req.final_logp = np.asarray(s.final_logp)
+        req.accept_count = np.asarray(s.acc)
+        total = max(1, s.progress * int(np.prod(self.state_shape)))
+        req.acceptance_rate = float(req.accept_count.sum()) / total
+        req.t_done = self.clock()
+
+    def drain(self) -> None:
+        """Flush the deferred finalize pipeline (every retired request's
+        result is host-materialised after this returns)."""
+        self.pipeline.drain()

@@ -247,3 +247,64 @@ class TestLMConsistency:
         loss_ref = jnp.mean(logz - ll)
         assert float(loss_c) == pytest.approx(float(loss_ref), abs=1e-5)
         assert float(count) == 32
+
+
+class TestPerRowCacheIndex:
+    """The (B,)-shaped decode index (cache contract, models/lm.py):
+    slots decoding at different positions must each reproduce the
+    scalar-index solo decode exactly — the substrate that lets
+    launch.serve pack heterogeneous prompt lengths."""
+
+    def _cfg(self):
+        return ModelConfig(
+            name="d", family="dense", n_layers=2, d_model=32, n_heads=2,
+            n_kv_heads=1, d_head=16, d_ff=64, vocab_size=100, **COMMON,
+        )
+
+    def test_heterogeneous_decode_matches_scalar_index(self):
+        cfg = self._cfg()
+        vals, _ = lm.init_lm_values(jax.random.PRNGKey(0), cfg)
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 100)
+        lens = (5, 9)
+        max_len = 20
+
+        # scalar-index solo references, one row at a time
+        refs = {0: [], 1: []}
+        for r, plen in enumerate(lens):
+            cache = lm.init_cache(cfg, 1, max_len)
+            _, cache = lm.prefill(
+                vals, cfg, {"tokens": tokens[r : r + 1, :plen]}, cache
+            )
+            for t in range(3):
+                logits, cache = lm.decode_step(
+                    vals, cfg, tokens[r : r + 1, plen + t : plen + t + 1],
+                    cache,
+                )
+                refs[r].append(np.asarray(logits[0]))
+
+        # packed: splice per-row prefills into one cache, (B,) index
+        shared = lm.init_cache(cfg, 2, max_len)
+        shared["index"] = jnp.zeros((2,), jnp.int32)
+        for r, plen in enumerate(lens):
+            row = lm.init_cache(cfg, 1, max_len)
+            _, row = lm.prefill(
+                vals, cfg, {"tokens": tokens[r : r + 1, :plen]}, row
+            )
+            shared["layers"] = jax.tree.map(
+                lambda s, x: s.at[:, r : r + 1].set(x),
+                shared["layers"], row["layers"],
+            )
+            shared["index"] = shared["index"].at[r].set(
+                jnp.asarray(row["index"], jnp.int32)
+            )
+
+        for t in range(3):
+            step = jnp.stack(
+                [tokens[r, lens[r] + t] for r in range(2)]
+            )[:, None]
+            logits, shared = lm.decode_step(vals, cfg, step, shared)
+            for r in range(2):
+                np.testing.assert_allclose(
+                    np.asarray(logits[r]), refs[r][t], atol=2e-4,
+                    err_msg=f"row {r} step {t}",
+                )

@@ -1,0 +1,297 @@
+"""Serving-tier correctness (DESIGN.md §Serving).
+
+The load-bearing claim: packing requests into the executor's slot axis
+never changes any request's numbers.  A request admitted mid-flight,
+sharing the batch with strangers, retiring early, or reusing a slot must
+reproduce its solo ``engine.run`` stream bit-for-bit — the ``step0``
+resume axis plus per-request keys make the slot pool invisible.  Also
+covers per-request collect inheritance, the FIFO overflow queue, and the
+first smoke coverage of the legacy ``launch.serve.BatchedServer``
+(heterogeneous prompt lengths over the per-row decode index).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs, workloads
+from repro.launch import serve as serve_mod
+from repro.serving import (
+    FIFOQueue,
+    PackedExecutor,
+    Scheduler,
+    ServeRequest,
+    latency_summary,
+)
+
+
+def solo_run(workload, seed, n_steps, collect, *, randomness="cim",
+             execution="scan"):
+    """The solo reference a packed request must reproduce bit-for-bit:
+    exactly the launch.sample derivation (PRNGKey(seed) -> split ->
+    builder init from k_init, chain stream from k_run)."""
+    key = jax.random.PRNGKey(seed)
+    k_init, k_run = jax.random.split(key)
+    wl = workloads.build(
+        workload, k_init, randomness=randomness, backend=execution, smoke=True
+    )
+    return wl.engine.run(k_run, wl.target, n_steps, wl.init_words,
+                         collect=collect)
+
+
+def make_executor(workload="gmm", n_slots=2, chunk_steps=8, *,
+                  randomness="cim", execution="scan"):
+    return PackedExecutor.for_workload(
+        workload, n_slots=n_slots, randomness=randomness,
+        execution=execution, smoke=True, chunk_steps=chunk_steps,
+    )
+
+
+def run_to_completion(ex):
+    done = []
+    while ex.active_count:
+        done.extend(ex.advance_chunk())
+    ex.drain()
+    return done
+
+
+def assert_matches_solo(req, ref):
+    np.testing.assert_array_equal(req.samples, np.asarray(ref.samples))
+    np.testing.assert_array_equal(
+        req.final_words, np.asarray(ref.final_words)
+    )
+    np.testing.assert_array_equal(
+        req.accept_count, np.asarray(ref.accept_count)
+    )
+    assert req.acceptance_rate == pytest.approx(
+        float(ref.acceptance_rate), abs=1e-6
+    )
+
+
+class TestMidFlightJoinLeave:
+    def test_join_mid_flight_is_bit_exact(self):
+        """A request admitted while another is 16 steps in must stream
+        exactly as if it ran alone (the step0 packing invariant)."""
+        ex = make_executor(n_slots=2, chunk_steps=8)
+        a = ServeRequest(rid=0, workload="gmm", n_steps=40, seed=1,
+                         collect="all")
+        ex.admit(a)
+        for _ in range(2):
+            ex.advance_chunk()
+        b = ServeRequest(rid=1, workload="gmm", n_steps=16, seed=2,
+                         collect="all")
+        ex.admit(b)
+        done = run_to_completion(ex)
+        assert {r.rid for r in done} == {0, 1}
+        assert_matches_solo(a, solo_run("gmm", 1, 40, "all"))
+        assert_matches_solo(b, solo_run("gmm", 2, 16, "all"))
+
+    def test_leave_does_not_perturb_survivor(self):
+        """An early retirement (and the freed slot running dead work)
+        must not touch the surviving request's stream."""
+        ex = make_executor(n_slots=2, chunk_steps=8)
+        a = ServeRequest(rid=0, workload="gmm", n_steps=48, seed=3,
+                         collect="all")
+        b = ServeRequest(rid=1, workload="gmm", n_steps=8, seed=4,
+                         collect="last")
+        ex.admit(a)
+        ex.admit(b)
+        run_to_completion(ex)
+        assert_matches_solo(a, solo_run("gmm", 3, 48, "all"))
+        assert_matches_solo(b, solo_run("gmm", 4, 8, "last"))
+
+    def test_gibbs_mid_flight_join(self):
+        """Same invariant under the gibbs update (checkerboard parity
+        rides the absolute step, so a mid-flight join must resume the
+        right colour)."""
+        ex = make_executor("ising", n_slots=2, chunk_steps=4)
+        a = ServeRequest(rid=0, workload="ising", n_steps=20, seed=5,
+                         collect="all")
+        ex.admit(a)
+        ex.advance_chunk()  # A at step 4 (odd parity next) when B joins
+        b = ServeRequest(rid=1, workload="ising", n_steps=12, seed=6,
+                         collect="all")
+        ex.admit(b)
+        done = run_to_completion(ex)
+        assert {r.rid for r in done} == {0, 1}
+        assert_matches_solo(a, solo_run("ising", 5, 20, "all"))
+        assert_matches_solo(b, solo_run("ising", 6, 12, "all"))
+        assert a.rate_label == "flip_rate"
+
+
+class TestSlotReuse:
+    def test_retire_and_replace_is_bit_exact(self):
+        """Three requests through one slot: the slot's history must be
+        invisible (streams are keyed by request, not slot)."""
+        ex = make_executor(n_slots=1, chunk_steps=8)
+        reqs = []
+        for seed in (1, 2, 3):
+            r = ServeRequest(rid=seed, workload="gmm", n_steps=24,
+                             seed=seed, collect="all")
+            assert ex.admit(r) == 0
+            run_to_completion(ex)
+            reqs.append(r)
+        for r in reqs:
+            assert_matches_solo(r, solo_run("gmm", r.seed, 24, "all"))
+
+
+class TestCollectInheritance:
+    def test_per_request_collect_modes(self):
+        """all / thin:k / last coexist in one packed batch, each bit-
+        identical to its solo run; thin is the strided slice of the
+        request's own "all" stream."""
+        ex = make_executor(n_slots=3, chunk_steps=8)
+        ra = ServeRequest(rid=0, workload="gmm", n_steps=32, seed=7,
+                          collect="all")
+        rt = ServeRequest(rid=1, workload="gmm", n_steps=32, seed=7,
+                          collect="thin:8")
+        rl = ServeRequest(rid=2, workload="gmm", n_steps=32, seed=7,
+                          collect="last")
+        for r in (ra, rt, rl):
+            ex.admit(r)
+        run_to_completion(ex)
+        assert_matches_solo(ra, solo_run("gmm", 7, 32, "all"))
+        assert_matches_solo(rt, solo_run("gmm", 7, 32, "thin:8"))
+        assert_matches_solo(rl, solo_run("gmm", 7, 32, "last"))
+        # thin == strided slice of the all stream (same seed)
+        np.testing.assert_array_equal(rt.samples, ra.samples[::8])
+        assert rl.samples.shape[0] == 0
+        np.testing.assert_array_equal(rl.final_words, ra.final_words)
+
+
+class TestPallasServing:
+    def test_pallas_slots_match_solo(self):
+        """The pallas path (per-slot programs, concrete step0) honours
+        the same packing invariant (interpret mode on CPU)."""
+        ex = make_executor("gmm", n_slots=2, chunk_steps=8,
+                           execution="pallas")
+        a = ServeRequest(rid=0, workload="gmm", n_steps=16, seed=1,
+                         collect="all")
+        b = ServeRequest(rid=1, workload="gmm", n_steps=8, seed=2,
+                         collect="last")
+        ex.admit(a)
+        ex.admit(b)
+        run_to_completion(ex)
+        assert_matches_solo(
+            a, solo_run("gmm", 1, 16, "all", execution="pallas")
+        )
+        assert_matches_solo(
+            b, solo_run("gmm", 2, 8, "last", execution="pallas")
+        )
+
+
+class TestFIFOQueue:
+    def test_order_and_arrival_gating(self):
+        q = FIFOQueue()
+        q.push("a", 0.0)
+        q.push("b", 1.0)
+        assert q.pop_ready(0.5) == "a"
+        assert q.pop_ready(0.5) is None  # b hasn't arrived yet
+        assert q.next_arrival() == 1.0
+        assert q.pop_ready(2.0) == "b"
+        assert not q and q.next_arrival() is None
+
+    def test_push_front_keeps_turn(self):
+        q = FIFOQueue()
+        q.push("a")
+        q.push("b")
+        head = q.pop_ready()
+        q.push_front(head)  # could not be placed: keeps its turn
+        assert q.pop_ready() == "a"
+        assert q.pop_ready() == "b"
+
+
+class TestScheduler:
+    def test_overflow_queue_is_fifo_and_bit_exact(self):
+        sched = Scheduler(n_slots=1, smoke=True, chunk_steps=8)
+        reqs = [
+            ServeRequest(rid=i, workload="gmm", n_steps=16, seed=i,
+                         collect="last")
+            for i in range(3)
+        ]
+        done = sched.serve(reqs)
+        assert len(done) == 3
+        by_admit = sorted(done, key=lambda r: r.t_admit)
+        assert [r.rid for r in by_admit] == [0, 1, 2]
+        for r in done:
+            ref = solo_run("gmm", r.seed, 16, "last")
+            np.testing.assert_array_equal(
+                r.final_words, np.asarray(ref.final_words)
+            )
+        summary = latency_summary(done)
+        assert summary["n_requests"] == 3
+        assert summary["requests_per_s"] > 0
+        assert summary["p99_latency_s"] >= summary["p50_latency_s"]
+
+    def test_default_steps_and_validation(self):
+        with pytest.raises(ValueError):
+            ServeRequest(rid=0, collect="bogus")
+        with pytest.raises(ValueError):
+            ServeRequest(rid=0, n_steps=0)
+        sched = Scheduler(n_slots=2, smoke=True, chunk_steps=8)
+        r = ServeRequest(rid=0, workload="gmm", seed=1, collect="last")
+        done = sched.serve([r])
+        # n_steps=None -> the workload group's default budget
+        default = workloads.build(
+            "gmm", jax.random.PRNGKey(0), smoke=True
+        ).n_steps
+        ref = solo_run("gmm", 1, default, "last")
+        np.testing.assert_array_equal(
+            done[0].final_words, np.asarray(ref.final_words)
+        )
+
+
+class TestBatchedServerSmoke:
+    """First coverage of the legacy KV-cache server — heterogeneous
+    prompt lengths must decode exactly like solo runs (the per-row
+    decode index satellite)."""
+
+    GEN = 3
+
+    def _server(self, n_slots):
+        cfg = configs.get_smoke_config("granite3_8b")
+        scfg = serve_mod.ServeConfig(
+            n_slots=n_slots, max_len=24, gen_tokens=self.GEN,
+            sampler="greedy", seed=0,
+        )
+        return cfg, serve_mod.BatchedServer(cfg, scfg)
+
+    def _drive(self, server, submissions):
+        for slot, req in submissions:
+            server.submit(slot, req)
+        finished = []
+        while server.active():
+            finished.extend(server.step())
+        return {r.rid: r.out_tokens for r in finished}
+
+    def test_heterogeneous_prompts_decode_like_solo(self):
+        cfg, packed = self._server(2)
+        rng = np.random.default_rng(0)
+        p0 = rng.integers(0, cfg.vocab_size, size=5)
+        p1 = rng.integers(0, cfg.vocab_size, size=9)
+        out = self._drive(packed, [
+            (0, serve_mod.Request(rid=0, prompt=p0)),
+            (1, serve_mod.Request(rid=1, prompt=p1)),
+        ])
+        assert all(len(t) == 1 + self.GEN for t in out.values())
+        for rid, prompt in ((0, p0), (1, p1)):
+            _, solo = self._server(1)
+            ref = self._drive(
+                solo, [(0, serve_mod.Request(rid=rid, prompt=prompt))]
+            )
+            assert out[rid] == ref[rid], f"packed decode diverged rid={rid}"
+
+    def test_retired_slot_is_refilled(self):
+        cfg, server = self._server(1)
+        rng = np.random.default_rng(1)
+        first = serve_mod.Request(
+            rid=0, prompt=rng.integers(0, cfg.vocab_size, size=4)
+        )
+        out = self._drive(server, [(0, first)])
+        assert server.free_slot() == 0  # retirement freed the slot
+        second = serve_mod.Request(
+            rid=1, prompt=rng.integers(0, cfg.vocab_size, size=6)
+        )
+        out2 = self._drive(server, [(0, second)])
+        assert len(out2[1]) == 1 + self.GEN
+        assert out[0] is not out2[1]

@@ -80,9 +80,11 @@ class TestServing:
             server.submit(
                 rid, Request(rid=rid, prompt=rng.integers(0, cfg.vocab_size, 8))
             )
+        finished = []
         while server.active():
-            server.step()
-        for r in server.slot_req:
+            finished.extend(server.step())  # step() frees retired slots
+        assert len(finished) == 3
+        for r in finished:
             assert len(r.out_tokens) == 7  # first + 6 generated
             assert all(0 <= t < cfg.vocab_size for t in r.out_tokens)
         assert server.acceptance, "MCMC sampler must report acceptance"
@@ -92,9 +94,10 @@ class TestServing:
         scfg = ServeConfig(n_slots=1, max_len=32, gen_tokens=4, sampler="greedy")
         server = BatchedServer(cfg, scfg)
         server.submit(0, Request(rid=0, prompt=np.arange(6) % cfg.vocab_size))
+        finished = []
         while server.active():
-            server.step()
-        assert len(server.slot_req[0].out_tokens) == 5
+            finished.extend(server.step())
+        assert len(finished[0].out_tokens) == 5
 
 
 class TestTokenSamplerFidelity:
