@@ -1,0 +1,62 @@
+"""Autotuner evidence table: measured constants vs the hand-chosen ones.
+
+One row per workload: the incumbent (committed ``EngineConfig``
+constants) and the autotuned winner, both measured under the tuner's own
+protocol (warm-up compile, best-of-N — ``samplers.autotune``).  Because
+the incumbent is always the first candidate in the tuner's grid and the
+winner is the measured argmax, ``speedup >= 1.0`` holds by construction
+— the bench gate (``check_regression.py``) then guards the *tuned*
+throughput across PRs via the shared ``site_steps_per_s`` column.
+
+Rows force a fresh measurement (``refresh=True``), so the table reports
+this machine/commit, not a stale cache; the measurement still lands in
+the autotune cache for subsequent runs to hit.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.bench_workloads import machine_calibration
+from repro import samplers, workloads
+
+
+def _row(name: str, smoke: bool, n_steps: int, repeats: int) -> dict:
+    key = jax.random.PRNGKey(0)
+    k_init, k_run = jax.random.split(key)
+    wl = workloads.build(name, k_init, randomness="cim", smoke=smoke)
+    cfg = wl.engine.config
+    tuned_cfg, tuned = samplers.autotune_config(
+        cfg, wl.target, wl.init_words, key=k_run,
+        n_steps=n_steps, repeats=repeats, refresh=True,
+    )
+    return {
+        "bench": "autotune",
+        "workload": name,
+        "chunk_default": cfg.chunk_steps,
+        # measured outputs (machine-dependent — excluded from row
+        # identity in check_regression.MEASURED_FIELDS)
+        "chunk_tuned": tuned.chunk_steps,
+        "block_c_tuned": tuned.block_c,
+        "execution_tuned": tuned.execution,
+        "default_steps_per_s": round(tuned.baseline_steps_per_s, 1),
+        "site_steps_per_s": round(tuned.steps_per_s, 1),
+        "calib_steps_per_s": round(machine_calibration(), 1),
+        "speedup": round(
+            tuned.steps_per_s / max(tuned.baseline_steps_per_s, 1e-9), 3
+        ),
+        "candidates": len(tuned.candidates),
+    }
+
+
+def run(smoke: bool = False) -> list[dict]:
+    if smoke:
+        spec = dict(smoke=True, n_steps=128, repeats=2)
+    else:
+        spec = dict(smoke=False, n_steps=512, repeats=3)
+    return [_row(name, **spec) for name in ("ising", "gmm")]
+
+
+if __name__ == "__main__":
+    for r in run(smoke=True):
+        print("  ".join(f"{k}={v}" for k, v in r.items()))

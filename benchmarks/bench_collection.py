@@ -127,7 +127,7 @@ def bench_case(
     update: str, randomness: str, collect: str, n_steps: int,
     chunk_steps: int, target, init, repeats: int = 2,
 ) -> dict:
-    """One timed eager ``engine.run`` (the CLI/workload call path), best
+    """One timed eager ``engine.submit`` (the CLI/workload call path), best
     of ``repeats`` with a warm-up compile pass, all outputs blocked on."""
     engine = samplers.MHEngine(
         samplers.EngineConfig(
@@ -140,8 +140,12 @@ def bench_case(
     )
     key = jax.random.PRNGKey(0)
 
+    plan = samplers.RunPlan(
+        target=target, n_steps=n_steps, init_words=init, key=key
+    )
+
     def once():
-        result = engine.run(key, target, n_steps, init)
+        result = engine.submit(plan).result
         jax.block_until_ready((result.samples, result.final_words))
         return result
 

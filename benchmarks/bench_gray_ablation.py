@@ -57,6 +57,8 @@ def run() -> list[dict]:
                         "p_bfr": p_bfr,
                         "encoding": "gray" if gray else "binary (paper)",
                         "tv_distance": round(tv, 4),
+                        # canonical label + pre-rename alias
+                        "acceptance_rate": round(acc, 3),
                         "acceptance": round(acc, 3),
                     }
                 )

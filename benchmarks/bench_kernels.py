@@ -70,8 +70,10 @@ def run() -> list[dict]:
                 samplers.EngineConfig(execution=execution, chunk_steps=32)
             )
             run_fn = jax.jit(
-                lambda kk, ii, e=engine, t=target, n=k: samplers.run_engine(
-                    kk, ii, engine=e, target=t, n_steps=n
+                lambda kk, ii, e=engine, t=target, n=k: e.submit(
+                    samplers.RunPlan(
+                        target=t, n_steps=n, init_words=ii, key=kk
+                    )
                 ).accept_count
             )
             dt = _time(run_fn, key, init)

@@ -27,6 +27,8 @@ def run() -> list[dict]:
                 "bench": "sampler_quality_burnin",
                 "burn_in": burn_in,
                 "tv_distance": round(float(0.5 * np.abs(emp - ref).sum()), 4),
+                # canonical label + pre-rename alias
+                "acceptance_rate": round(float(res.acceptance_rate), 3),
                 "acceptance": round(float(res.acceptance_rate), 3),
             }
         )

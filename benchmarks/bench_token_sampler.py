@@ -108,6 +108,8 @@ def run() -> list[dict]:
                 "randomness": randomness,
                 "mh_steps": 64,
                 "tv_vs_reference": round(tv, 4),
+                # canonical label + pre-rename alias (DESIGN.md §Run-API)
+                "acceptance_rate": round(acc, 3),
                 "acceptance": round(acc, 3),
             }
         )

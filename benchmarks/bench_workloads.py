@@ -93,9 +93,11 @@ def bench_workload(
         "wall_s": round(wall_s, 3),
         "site_steps_per_s": round(site_steps / max(wall_s, 1e-9), 1),
         "calib_steps_per_s": round(machine_calibration(), 1),
-        # gibbs diagnostics label the engine rate as a flip count
-        # (DESIGN.md §2); the bench schema keeps one column for both
-        "acceptance": diag.get("acceptance_rate", diag.get("flip_rate")),
+        # canonical rate label (workloads.WorkloadRun.rate_key):
+        # acceptance_rate for mh, flip_rate for gibbs; "acceptance" is
+        # the pre-rename alias column kept for old table readers
+        wl.rate_key: diag.get(wl.rate_key),
+        "acceptance": diag.get(wl.rate_key),
         "tau": diag["tau"],
         "ess": diag["ess"],
         "split_rhat": diag["split_rhat"],

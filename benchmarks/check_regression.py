@@ -27,7 +27,10 @@ MEASURED_FIELDS = frozenset({
     "site_steps_per_s",
     "steps_per_s",
     "calib_steps_per_s",
+    # the canonical rate labels (workloads.WorkloadRun.rate_key) plus the
+    # pre-rename "acceptance" alias column old tables still carry
     "acceptance",
+    "acceptance_rate",
     "flip_rate",
     "tau",
     "ess",
@@ -35,6 +38,14 @@ MEASURED_FIELDS = frozenset({
     "macro_energy_uj",
     "ess_per_joule",
     "window_capped",
+    # autotune table (benchmarks/bench_autotune.py): the tuned choice is
+    # a machine-dependent *output*, never row identity
+    "chunk_tuned",
+    "block_c_tuned",
+    "execution_tuned",
+    "default_steps_per_s",
+    "speedup",
+    "candidates",
     # collection table (benchmarks/bench_collection.py) — analytic
     # footprints ride along as measured so formula tweaks never orphan
     # a baseline row

@@ -39,6 +39,7 @@ MODULES = [
     ("token_sampler", "benchmarks.bench_token_sampler"),
     ("gray_ablation", "benchmarks.bench_gray_ablation"),
     ("workloads", "benchmarks.bench_workloads"),
+    ("autotune", "benchmarks.bench_autotune"),
     ("chain_scaling", "benchmarks.bench_chain_scaling"),
     ("tempering", "benchmarks.bench_tempering"),
     ("collection", "benchmarks.bench_collection"),

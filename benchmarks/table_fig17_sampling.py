@@ -109,6 +109,8 @@ def _case(name, density, codec):
             "time_s": f"{t_macro:.3g}",
             "samples_per_s": f"{N_SAMPLES / t_macro:.3g}",
             "tv_distance": round(_tv(words, ref, codec.nbits), 4),
+            # canonical label + pre-rename alias
+            "acceptance_rate": round(stats.acceptance_rate, 3),
             "acceptance": round(stats.acceptance_rate, 3),
             "energy_pj_per_sample": round(stats.energy_per_sample_pj, 4),
             "speedup_vs_numpy": f"{t_np / t_macro:.3g}",

@@ -3,5 +3,7 @@ from repro.checkpoint.checkpoint import (  # noqa: F401
     CheckpointConfig,
     latest_step,
     load_checkpoint,
+    load_checkpoint_tree,
     save_checkpoint,
 )
+from repro.checkpoint.resume import run_resumable  # noqa: F401

@@ -151,6 +151,29 @@ def load_checkpoint(
     return jax.tree.unflatten(jax.tree.structure(like_tree), leaves), manifest
 
 
+def load_checkpoint_tree(directory: str, step: int, verify: bool = True):
+    """Restore a checkpoint as a flat ``{key: np.ndarray}`` dict, shapes
+    taken from the manifest rather than a ``like_tree``.
+
+    The resume driver (checkpoint/resume.py) needs this because one of
+    its leaves — the accumulated sample stream — grows with every
+    segment, so the caller cannot know its shape before reading the
+    manifest.  Only flat dict trees round-trip here (each manifest key
+    is one dict key); ``load_checkpoint`` remains the structured,
+    reshardable restore.
+    """
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    tree = {}
+    for entry in manifest["leaves"]:
+        fpath = os.path.join(path, entry["file"])
+        if verify and _sha256(fpath) != entry["sha256"]:
+            raise IOError(f"integrity check failed for {fpath}")
+        tree[entry["key"]] = np.load(fpath, allow_pickle=False)
+    return tree, manifest
+
+
 class CheckpointManager:
     """Retention + async writes + auto-resume."""
 

@@ -1,0 +1,201 @@
+"""Bit-exact resumable runs: the checkpoint-backed segment driver.
+
+``run_resumable`` executes a ``RunPlan`` as a sequence of checkpointed
+segments.  After each segment it saves the engine's resume carry
+``(words, logp, accept_count)`` plus the accumulated sample stream via
+the atomic checkpoint subsystem (checkpoint.py); on the next invocation
+with the same ``directory`` it restores the newest checkpoint and
+continues.  The result is bit-identical to one unsegmented run —
+tests/test_checkpoint.py asserts it across {mh, gibbs} x {host, cim,
+fused}:
+
+  * operands for step ``t`` depend only on ``(key, step0 + t)``, so the
+    restarted segment continues the exact randomness stream (the engine's
+    ``step0`` segment-invariance, DESIGN.md §Tempering);
+  * ``accept_count`` sums exactly (int32 per-site counts);
+  * ``acceptance_rate`` is recomputed with the engine's own float32
+    expression over the summed counts;
+  * ``final_logp`` either rides the solo-MH-scan carry or is re-derived
+    from the restored state by a pure deterministic ``log_prob`` — the
+    same bits either way;
+  * ``thin:<k>`` keeps *absolute* steps, so per-segment kept sets
+    concatenate into the unsegmented kept set (DESIGN.md §Collection).
+
+A checkpoint records the plan's :meth:`RunPlan.fingerprint` (engine
+axes, stream key, state layout — but NOT chunk_steps/block_c/execution,
+which never change the stream), and restore refuses a mismatch: a
+resumed run is the *same* chain or an error, never silently a different
+one.  ``on_segment`` is a post-save hook — tests use it to simulate
+preemption by raising mid-run.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpoint import (
+    latest_step,
+    load_checkpoint_tree,
+    save_checkpoint,
+)
+from repro.samplers.engine import EngineResult, MHEngine, parse_collect
+from repro.samplers.plan import RunHandle, RunPlan, carries_logp
+
+
+def _time_axis(engine: MHEngine) -> int:
+    """Axis of the kept-step dimension in ``EngineResult.samples``:
+    multi-chain runs are chain-major (C, T, *state), solo runs (T, *state)
+    — segment streams concatenate along it (DESIGN.md §Chains-axis)."""
+    return 1 if engine.config.num_chains > 1 else 0
+
+
+def _empty_samples(words, axis: int):
+    """The engine's ``collect='last'`` placeholder: a 0-length time axis
+    in the chain-major layout."""
+    shape = list(np.shape(words))
+    shape.insert(axis, 0)
+    return tuple(shape)
+
+
+def _assemble(plan, acc, samples_pieces, words, logp, mode, axis):
+    """The stitched EngineResult — the engine's own output expressions
+    applied to the segment union (engine.py keeps them in one place;
+    mirror them exactly or bit-parity dies)."""
+    if mode == "last":
+        samples = jnp.zeros(_empty_samples(words, axis), jnp.uint32)
+    elif len(samples_pieces) == 1:
+        samples = jnp.asarray(samples_pieces[0])
+    else:
+        samples = jnp.concatenate(
+            [jnp.asarray(p) for p in samples_pieces], axis=axis
+        )
+    acc = jnp.asarray(acc)
+    total = jnp.float32(plan.n_steps) * jnp.float32(
+        max(1, int(np.asarray(plan.init_words).size))
+    )
+    return EngineResult(
+        samples=samples,
+        accept_count=acc,
+        acceptance_rate=jnp.sum(acc).astype(jnp.float32) / total,
+        final_words=jnp.asarray(words),
+        final_logp=jnp.asarray(logp),
+        n_steps=jnp.int32(plan.n_steps),
+    )
+
+
+def run_resumable(
+    engine: MHEngine,
+    plan: RunPlan,
+    *,
+    directory: str,
+    every: int | None = None,
+    on_segment=None,
+    verify: bool = True,
+) -> RunHandle:
+    """Run ``plan`` in checkpointed segments of ``every`` steps
+    (default: the engine's ``chunk_steps``); restart from the newest
+    checkpoint in ``directory`` when one exists.
+
+    Returns a ``RunHandle`` whose result is bit-identical to
+    ``engine.submit(plan)`` run unsegmented, however many times the
+    process died in between.  ``on_segment(done, total, handle)`` fires
+    after each segment's checkpoint commits (``handle`` is the segment's
+    RunHandle); raising from it abandons the run *after* the save — the
+    preemption point tests exploit.
+    """
+    n_total = int(plan.n_steps)
+    base = plan.concrete_step0  # raises on traced offsets — resume is a
+    # host-side driver, not a traceable program
+    every = int(every) if every else engine.config.chunk_steps
+    if every < 1:
+        raise ValueError(f"every must be >= 1, got {every}")
+    mode, _k = parse_collect(
+        plan.collect if plan.collect is not None else engine.config.collect
+    )
+    axis = _time_axis(engine)
+    fingerprint = plan.fingerprint(engine)
+
+    # -- restore ------------------------------------------------------------
+    done = 0
+    acc = np.zeros(np.shape(plan.init_words), np.int32)
+    pieces: list = []
+    words = plan.init_words
+    logp = None
+    step = latest_step(directory)
+    if step is not None:
+        tree, manifest = load_checkpoint_tree(directory, step, verify=verify)
+        saved_fp = manifest.get("extra", {}).get("fingerprint")
+        if saved_fp != fingerprint:
+            raise ValueError(
+                f"checkpoint {directory} step {step} was written by a "
+                "different run (engine axes / stream key / state layout "
+                "differ) — refusing to resume a different chain; "
+                f"saved fingerprint {saved_fp!r} != plan {fingerprint!r}"
+            )
+        done = step - base
+        if not 0 < done <= n_total:
+            raise ValueError(
+                f"checkpoint step {step} is outside this plan's span "
+                f"[{base}, {base + n_total}] — wrong directory?"
+            )
+        acc = tree["acc"]
+        words = tree["words"]
+        logp = tree["logp"]
+        if mode != "last":
+            pieces = [tree["samples"]]
+
+    handle = None
+    while done < n_total:
+        seg = min(every, n_total - done)
+        if handle is None:
+            sub = plan.replace(
+                n_steps=seg,
+                step0=base + done,
+                init_words=words,
+                # first segment of a fresh run keeps the plan's own carry;
+                # a restored segment re-seeds it from the checkpoint when
+                # the engine takes the carry at all
+                init_logp=(
+                    jnp.asarray(logp)
+                    if done and carries_logp(engine, plan.target)
+                    else (plan.init_logp if done == 0 else None)
+                ),
+            )
+            handle = engine.submit(sub)
+        else:
+            handle = handle.resume(seg)
+        acc = acc + np.asarray(handle.accept_count)
+        if mode != "last":
+            pieces.append(np.asarray(handle.samples))
+        words = handle.final_words
+        logp = handle.final_logp
+        done += seg
+        save_checkpoint(
+            directory,
+            base + done,
+            {
+                "acc": np.asarray(acc),
+                "logp": np.asarray(logp),
+                "samples": (
+                    np.concatenate(pieces, axis=axis)
+                    if len(pieces) > 1
+                    else np.asarray(pieces[0])
+                )
+                if mode != "last"
+                else np.zeros(_empty_samples(words, axis), np.uint32),
+                "words": np.asarray(words),
+            },
+            extra={
+                "fingerprint": fingerprint,
+                "base_step": base,
+                "total_steps": n_total,
+            },
+        )
+        if len(pieces) > 1:  # keep the accumulated stream as one block
+            pieces = [np.concatenate(pieces, axis=axis)]
+        if on_segment is not None:
+            on_segment(done, n_total, handle)
+
+    result = _assemble(plan, acc, pieces, words, logp, mode, axis)
+    return RunHandle(plan=plan, result=result, engine=engine)

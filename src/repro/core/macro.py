@@ -119,7 +119,7 @@ class CIMMacro:
         """
         cfg = self.config
         per_chain = -(-n_samples // cfg.n_compartments)
-        result = metropolis.run_chain(
+        result = metropolis._run_chain_impl(
             key,
             log_prob_fn,
             cfg.mh_config(),

@@ -22,6 +22,7 @@ implement the correct test from the paper's own Algorithm 1
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Callable, NamedTuple
 
@@ -80,7 +81,7 @@ class MHResult(NamedTuple):
     jax.jit,
     static_argnames=("log_prob_fn", "n_samples", "cfg", "chain_shape"),
 )
-def run_chain(
+def _run_chain_impl(
     key,
     log_prob_fn: LogProbFn,
     cfg: MHConfig,
@@ -88,12 +89,6 @@ def run_chain(
     chain_shape: tuple = (),
     init_words: Array | None = None,
 ) -> MHResult:
-    """Run MH and keep ``n_samples`` post-burn-in (thinned) states per chain.
-
-    Total iterations = burn_in + n_samples * thin.  Samples are the *chain
-    states* after each kept step (MH output convention: a rejected step
-    re-emits the previous value — exactly the macro's re-copy behaviour).
-    """
     if init_words is None:
         k_init, key = jax.random.split(key)
         init_words = jax.random.randint(
@@ -105,7 +100,11 @@ def run_chain(
     n_steps = cfg.burn_in + n_samples * cfg.thin
     engine = samplers.MHEngine(cfg.engine_config())
     target = samplers.CallableTarget(log_prob_fn, cfg.nbits)
-    res = engine.run(key, target, n_steps, init_words)
+    res = engine.submit(
+        samplers.RunPlan(
+            target=target, n_steps=n_steps, init_words=init_words, key=key
+        )
+    ).result
 
     kept = res.samples[cfg.burn_in :]
     if cfg.thin > 1:
@@ -120,6 +119,36 @@ def run_chain(
         ),
         n_steps=jnp.int32(n_steps),
         acceptance_rate=res.acceptance_rate,
+    )
+
+
+def run_chain(
+    key,
+    log_prob_fn: LogProbFn,
+    cfg: MHConfig,
+    n_samples: int,
+    chain_shape: tuple = (),
+    init_words: Array | None = None,
+) -> MHResult:
+    """Run MH and keep ``n_samples`` post-burn-in (thinned) states per chain.
+
+    Total iterations = burn_in + n_samples * thin.  Samples are the *chain
+    states* after each kept step (MH output convention: a rejected step
+    re-emits the previous value — exactly the macro's re-copy behaviour).
+
+    .. deprecated:: build a ``samplers.RunPlan`` and call
+       ``MHEngine.submit(plan, compiled=True)`` instead (DESIGN.md
+       §Run-API); this wrapper stays bit-compatible but only covers the
+       burn-in/thin convenience slice of the engine surface.
+    """
+    warnings.warn(
+        "core.metropolis.run_chain is deprecated; build a samplers.RunPlan "
+        "and call engine.submit(plan, compiled=True) (DESIGN.md §Run-API)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return _run_chain_impl(
+        key, log_prob_fn, cfg, n_samples, chain_shape, init_words
     )
 
 

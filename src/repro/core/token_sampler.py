@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from functools import partial
 from typing import NamedTuple
 
@@ -75,18 +76,12 @@ class TokenSampleResult(NamedTuple):
 
 
 @partial(jax.jit, static_argnames=("cfg",))
-def sample_tokens(
+def _sample_tokens_impl(
     key,
     logits: Array,
     cfg: TokenSamplerConfig,
     init_tokens: Array | None = None,
 ) -> TokenSampleResult:
-    """Draw one token per row of ``logits`` (B, V) via the CIM-MCMC chain.
-
-    ``init_tokens`` seeds each chain (e.g. the previous sampled token —
-    the macro's "initial value x^(0) written into the bitcells"); defaults
-    to the argmax, which guarantees a finite-logp start.
-    """
     engine = samplers.MHEngine(cfg.engine_config())
     tokens, result = engine.sample_tokens(
         key,
@@ -101,3 +96,29 @@ def sample_tokens(
         acceptance_rate=result.acceptance_rate,
         final_logp=result.final_logp[:, 0],
     )
+
+
+def sample_tokens(
+    key,
+    logits: Array,
+    cfg: TokenSamplerConfig,
+    init_tokens: Array | None = None,
+) -> TokenSampleResult:
+    """Draw one token per row of ``logits`` (B, V) via the CIM-MCMC chain.
+
+    ``init_tokens`` seeds each chain (e.g. the previous sampled token —
+    the macro's "initial value x^(0) written into the bitcells"); defaults
+    to the argmax, which guarantees a finite-logp start.
+
+    .. deprecated:: the documented surface is
+       ``MHEngine.sample_tokens`` reached through ``repro.samplers``
+       (DESIGN.md §Run-API); this wrapper stays bit-compatible.
+    """
+    warnings.warn(
+        "core.token_sampler.sample_tokens is deprecated; configure an "
+        "MHEngine via repro.samplers and call engine.sample_tokens "
+        "(DESIGN.md §Run-API)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return _sample_tokens_impl(key, logits, cfg, init_tokens)

@@ -104,6 +104,56 @@ class StreamingChainStats:
         self.n += t
         return self
 
+    # --- cross-shard merge ---------------------------------------------
+
+    def merge(self, other: "StreamingChainStats") -> "StreamingChainStats":
+        """Combine with an accumulator over a *disjoint* chain shard.
+
+        The engine's "chains" sharding rule never communicates between
+        chains (DESIGN.md §Chains-axis), so each shard can stream its
+        own (t, C/n_shards) blocks locally; merging is exact — every
+        per-chain field simply concatenates along the chain axis, and
+        the chain-averaged estimators (tau, split-R-hat) computed from
+        the merged state equal the unsharded accumulator's bit-for-bit.
+        Both sides must cover the same step span (same ``total_steps``,
+        ``max_lag``, ``c``, and rows consumed so far).
+        """
+        for attr in ("total_steps", "max_lag", "c", "n"):
+            if getattr(self, attr) != getattr(other, attr):
+                raise ValueError(
+                    f"cannot merge shards that disagree on {attr}: "
+                    f"{getattr(self, attr)} != {getattr(other, attr)} — "
+                    "shards must stream the same step span in lock-step"
+                )
+        out = StreamingChainStats(
+            self.num_chains + other.num_chains,
+            self.total_steps,
+            max_lag=self.max_lag,
+            c=self.c,
+        )
+        out.n = self.n
+        cat = lambda a, b: np.concatenate([a, b], axis=-1)  # noqa: E731
+        out._sum = cat(self._sum, other._sum)
+        out._cross = cat(self._cross, other._cross)
+        out._head = cat(self._head, other._head)
+        out._tail = cat(self._tail, other._tail)
+        out._half_n = cat(self._half_n, other._half_n)
+        out._half_sum = cat(self._half_sum, other._half_sum)
+        out._half_sumsq = cat(self._half_sumsq, other._half_sumsq)
+        return out
+
+    @classmethod
+    def merge_shards(cls, shards) -> "StreamingChainStats":
+        """Fold an iterable of per-shard accumulators (chain order =
+        shard order, matching the mesh's device order)."""
+        shards = list(shards)
+        if not shards:
+            raise ValueError("merge_shards needs at least one accumulator")
+        out = shards[0]
+        for s in shards[1:]:
+            out = out.merge(s)
+        return out
+
     # --- estimators ----------------------------------------------------
 
     def _autocov(self) -> np.ndarray:

@@ -57,8 +57,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import diagnostics, tempering, workloads
+from repro import diagnostics, samplers, tempering, workloads
 from repro.core import energy
+from repro.launch.mesh import make_chains_mesh
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -127,6 +128,17 @@ def build_parser() -> argparse.ArgumentParser:
         help="simulated annealing over S geometric cooling stages",
     )
     p.add_argument(
+        "--autotune", action="store_true",
+        help="replace the hand-chosen chunk_steps/block_c/backend with "
+        "the measured per-(workload, shape, device) winner (cached; "
+        "DESIGN.md §Run-API)",
+    )
+    p.add_argument(
+        "--autotune-cache", default=None, metavar="PATH",
+        help="autotune cache file (default $REPRO_AUTOTUNE_CACHE or "
+        "~/.cache/repro/autotune.json)",
+    )
+    p.add_argument(
         "--beta-min", type=float, default=0.25,
         help="hottest ladder beta / annealing start beta",
     )
@@ -169,24 +181,9 @@ def _workload_kwargs(args) -> dict:
     return {k: v for k, v in candidates.items() if k in params}
 
 
-def _chains_mesh(num_chains: int):
-    """A 1-D device mesh for sharding the chains axis, when it helps.
-
-    Built via the ``jax.sharding.Mesh`` constructor directly —
-    ``jax.make_mesh`` only exists from jax 0.4.35, and this must run on
-    the whole supported range (pyproject pins >=0.4.30)."""
-    n_dev = jax.device_count()
-    if num_chains < 2 or n_dev < 2:
-        return None
-    return jax.sharding.Mesh(np.asarray(jax.devices()), ("data",))
-
-
 def _rate_key(wl) -> str:
-    """Gibbs has no reject: the engine's accept_count is a flip count
-    (DESIGN.md §2), and the user-facing label says so."""
-    return "flip_rate" if wl.engine.config.update == "gibbs" else (
-        "acceptance_rate"
-    )
+    """The workload owns the canonical rate label (DESIGN.md §2)."""
+    return wl.rate_key
 
 
 def _series_diagnostics(wl, samples) -> dict:
@@ -300,6 +297,17 @@ def main(argv=None) -> dict:
         "backend": args.backend,
         "collect": _collect_arg(args),
     }
+    if args.autotune:
+        wl.engine, tuned = samplers.autotune_engine(
+            wl.engine, wl.target, wl.init_words,
+            cache_path=args.autotune_cache,
+        )
+        base["backend"] = tuned.execution
+        base["autotune"] = (
+            f"chunk{tuned.chunk_steps}:{tuned.execution} ({tuned.source}, "
+            f"{tuned.steps_per_s / max(tuned.baseline_steps_per_s, 1e-9):.2f}x"
+            " vs incumbent)"
+        )
     if args.ladder:
         row = {**base, **_run_ladder(args, wl, k_run)}
         print("  ".join(f"{k}={v}" for k, v in row.items()))
@@ -309,7 +317,7 @@ def main(argv=None) -> dict:
         print("  ".join(f"{k}={v}" for k, v in row.items()))
         return row
 
-    mesh = _chains_mesh(args.num_chains)
+    mesh = make_chains_mesh(args.num_chains)
     t0 = time.time()
     result = wl.run(k_run, mesh=mesh)
     jax.block_until_ready(result.samples)

@@ -149,7 +149,9 @@ class BatchedServer:
             return jax.random.categorical(
                 sub, logits[:, :v] / self.scfg.temperature, axis=-1
             ).astype(jnp.int32)
-        result = token_sampler.sample_tokens(sub, logits[:, :v], self.sampler_cfg)
+        result = token_sampler._sample_tokens_impl(
+            sub, logits[:, :v], self.sampler_cfg
+        )
         self.acceptance.append(float(result.acceptance_rate))
         return result.tokens
 

@@ -76,6 +76,16 @@ def build_parser() -> argparse.ArgumentParser:
         help="admission/retirement granularity (default: engine chunk)",
     )
     p.add_argument(
+        "--autotune", action="store_true",
+        help="measure chunk_steps for the workload template before "
+        "serving (samplers.autotune; cached per workload/shape/device)",
+    )
+    p.add_argument(
+        "--autotune-cache", default=None, metavar="PATH",
+        help="autotune cache file (default: $REPRO_AUTOTUNE_CACHE or "
+        "~/.cache/repro/autotune.json)",
+    )
+    p.add_argument(
         "--poisson-rate", type=float, default=0.0,
         help="mean synthetic arrivals/s (0 = all requests arrive at t=0)",
     )
@@ -134,12 +144,40 @@ def main(argv=None) -> dict:
     requests = (
         load_spec(args.spec) if args.spec else poisson_requests(args)
     )
+    chunk_steps = args.chunk_steps
+    if args.autotune and chunk_steps is None:
+        # tune the segment granularity on the workload template (the
+        # executor group's engine/target pair); execution stays as the
+        # --backend pin — the serving tier's pack-vs-solo dispatch is
+        # chosen there, not by throughput alone
+        import jax
+
+        from repro import samplers
+
+        wl = workloads.build(
+            args.workload, jax.random.PRNGKey(0),
+            randomness=args.randomness, smoke=args.smoke,
+        )
+        cfg = wl.engine.config
+        if args.backend in ("scan", "pallas"):
+            import dataclasses
+
+            cfg = dataclasses.replace(cfg, execution=args.backend)
+        _, tuned = samplers.autotune_config(
+            cfg, wl.target, wl.init_words, cache_path=args.autotune_cache
+        )
+        chunk_steps = tuned.chunk_steps
+        print(
+            f"[serve_engine] autotune: chunk_steps={chunk_steps} "
+            f"({tuned.source}, {tuned.steps_per_s:.3g} site-steps/s vs "
+            f"incumbent {tuned.baseline_steps_per_s:.3g})"
+        )
     sched = Scheduler(
         n_slots=args.slots,
         randomness=args.randomness,
         execution=args.backend,
         smoke=args.smoke,
-        chunk_steps=args.chunk_steps,
+        chunk_steps=chunk_steps,
     )
     done = sched.serve(requests, realtime=args.realtime)
     for r in sorted(done, key=lambda r: r.rid):

@@ -13,10 +13,19 @@
 #   collection   how much of the chain leaves the engine (all states /
 #                every k-th absolute step / final state only)
 #
-# core/metropolis.py, core/token_sampler.py, core/macro.py and
-# launch/serve.py are all thin layers over this package.
+# The documented way to launch a run is the RunPlan surface (DESIGN.md
+# §Run-API): build a RunPlan, call MHEngine.submit, continue from the
+# returned RunHandle.  `run_engine` and the core/metropolis.py /
+# core/token_sampler.py wrappers are deprecated shims over it (they
+# warn, but stay bit-compatible); core/macro.py and launch/serve.py are
+# thin layers over this package.
 
-from repro.samplers.engine import (  # noqa: F401
+from repro.samplers.autotune import (
+    TuneResult,
+    autotune_config,
+    autotune_engine,
+)
+from repro.samplers.engine import (
     EngineConfig,
     EngineResult,
     MHEngine,
@@ -26,7 +35,12 @@ from repro.samplers.engine import (  # noqa: F401
     resolve_execution,
     run_engine,
 )
-from repro.samplers.randomness import (  # noqa: F401
+from repro.samplers.plan import (
+    RunHandle,
+    RunPlan,
+    submit,
+)
+from repro.samplers.randomness import (
     CIMRandomness,
     FusedRandomness,
     HostRandomness,
@@ -35,9 +49,44 @@ from repro.samplers.randomness import (  # noqa: F401
     chain_keys,
     make_randomness_backend,
 )
-from repro.samplers.targets import (  # noqa: F401
+from repro.samplers.targets import (
     CallableTarget,
     TableTarget,
     TopKTarget,
     logits_target,
 )
+
+__all__ = [
+    # the run surface (DESIGN.md §Run-API)
+    "RunPlan",
+    "RunHandle",
+    "submit",
+    "MHEngine",
+    "SamplerEngine",
+    "EngineConfig",
+    "EngineResult",
+    # autotuner (measured chunk_steps/block_c/backend)
+    "TuneResult",
+    "autotune_config",
+    "autotune_engine",
+    # axis helpers
+    "kept_count",
+    "parse_collect",
+    "resolve_execution",
+    # randomness backends
+    "RandomnessBackend",
+    "HostRandomness",
+    "CIMRandomness",
+    "FusedRandomness",
+    "make_randomness_backend",
+    "chain_key",
+    "chain_keys",
+    # targets
+    "CallableTarget",
+    "TableTarget",
+    "TopKTarget",
+    "logits_target",
+    # deprecated shims (warn on call; see also core.metropolis.run_chain
+    # and core.token_sampler.sample_tokens)
+    "run_engine",
+]

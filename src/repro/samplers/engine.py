@@ -49,7 +49,6 @@ step regardless of what is kept.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import NamedTuple
 
 import jax
@@ -332,7 +331,9 @@ def _concrete_step0(step0) -> int:
         raise ValueError(
             "pallas execution needs a concrete (python int) step0 — the "
             "chunk schedule and checkerboard parity are compile-time "
-            "static; use execution='scan' for traced stream offsets"
+            "static; use execution='scan' for traced stream offsets, or "
+            "launch per-segment programs with concrete offsets like the "
+            "serving tier's pallas fallback (serving/executor.py)"
         ) from e
 
 
@@ -717,6 +718,20 @@ class MHEngine:
     def randomness(self) -> RandomnessBackend:
         return self._backend
 
+    def submit(self, plan, *, compiled: bool = False):
+        """Run a validated ``RunPlan``; returns a re-submittable
+        ``RunHandle`` (DESIGN.md §Run-API) — the documented public entry.
+
+        ``compiled=True`` routes through the cached jitted dispatcher
+        (one device dispatch per distinct static signature; needs a
+        concrete ``step0``).  The default direct path is traceable, so
+        plans built inside jitted/vmapped programs (tempering segments,
+        the serving tier's packed advance) submit the same way.
+        """
+        from repro.samplers.plan import submit  # lazy: plan imports engine
+
+        return submit(self, plan, compiled=compiled)
+
     def run(
         self, key, target, n_steps: int, init_words, *,
         chain_id: int = 0, mesh=None, step0=0, collect: str | None = None,
@@ -838,8 +853,15 @@ class MHEngine:
             except TypeError as e:
                 raise ValueError(
                     "collect='thin:<k>' needs a concrete (python int) step0 "
-                    "— the kept-sample count is part of the output shape; "
-                    "use collect='all' or 'last' with traced stream offsets"
+                    "— the kept-sample count is part of the output shape, "
+                    "so a traced stream offset cannot size it.  Either pass "
+                    "step0 as a python int (re-jitting per offset), or keep "
+                    "the traced offset with collect='all' and take the "
+                    "host-side strided slice samples[(-step0) % k :: k] "
+                    "afterwards — bit-identical to engine thin on absolute "
+                    "steps, and exactly the serving tier's fallback "
+                    "(serving/executor.py, DESIGN.md §Serving).  "
+                    "collect='last' also accepts traced offsets."
                 ) from e
         return mode_k
 
@@ -992,24 +1014,31 @@ class MHEngine:
 SamplerEngine = MHEngine  # the engine outgrew its MH-only name in PR 2
 
 
-@partial(
-    jax.jit,
-    static_argnames=(
-        "engine", "target", "n_steps", "chain_id", "step0", "collect"
-    ),
-)
 def run_engine(
     key, init_words, *, engine: MHEngine, target, n_steps: int,
     chain_id: int = 0, step0: int = 0, collect: str | None = None,
 ):
-    """Jitted engine entry.  ``engine`` and ``target`` are identity-hashed
-    statics — reuse the same instances across calls to reuse the trace.
-    ``step0`` and ``collect`` are static here (pallas-safe, and under jit
-    the pallas chunk loop collapses into one dispatch with in-place
-    output-buffer updates); callers that resume at many offsets should
-    jit ``engine.run`` themselves with a traced offset under scan
-    execution (see tempering/exchange.py)."""
-    return engine.run(
-        key, target, n_steps, init_words, chain_id=chain_id, step0=step0,
-        collect=collect,
+    """Deprecated jitted entry — build a ``RunPlan`` and call
+    ``engine.submit(plan, compiled=True)`` instead (DESIGN.md §Run-API).
+
+    Bit- and dispatch-compatible with the historical signature: routes
+    through the same cached jitted dispatcher (``engine``/``target`` are
+    identity-hashed statics — reuse the same instances to reuse the
+    trace), and the warning fires per call because it lives outside the
+    trace.
+    """
+    import warnings
+
+    from repro.samplers.plan import RunPlan, submit
+
+    warnings.warn(
+        "run_engine is deprecated; build a samplers.RunPlan and call "
+        "engine.submit(plan, compiled=True) (DESIGN.md §Run-API)",
+        DeprecationWarning,
+        stacklevel=2,
     )
+    plan = RunPlan(
+        target=target, n_steps=n_steps, init_words=init_words, key=key,
+        chain_id=chain_id, step0=step0, collect=collect,
+    )
+    return submit(engine, plan, compiled=True).result

@@ -27,6 +27,8 @@ from functools import partial
 
 import jax
 
+from repro.samplers import RunPlan
+
 
 def make_advance_fn(engine, target):
     """The packed-segment program for one (engine, target) pair.
@@ -55,10 +57,14 @@ def make_advance_fn(engine, target):
         )
         def advance(words, logp, keys, step0s, *, seg, collect):
             def one(k, w, lp, s0):
-                res = engine.run(
-                    k, target, seg, w, step0=s0, collect=collect,
-                    init_logp=lp,
-                )
+                # the RunPlan surface is traceable: per-slot traced
+                # step0/state build a plan inside the vmap (§Run-API)
+                res = engine.submit(
+                    RunPlan(
+                        target=target, n_steps=seg, init_words=w, key=k,
+                        step0=s0, collect=collect, init_logp=lp,
+                    )
+                ).result
                 return (
                     res.samples, res.final_words, res.final_logp,
                     res.accept_count,
@@ -78,7 +84,12 @@ def make_advance_fn(engine, target):
             del logp
 
             def one(k, w, s0):
-                res = engine.run(k, target, seg, w, step0=s0, collect=collect)
+                res = engine.submit(
+                    RunPlan(
+                        target=target, n_steps=seg, init_words=w, key=k,
+                        step0=s0, collect=collect,
+                    )
+                ).result
                 return (
                     res.samples, res.final_words, res.final_logp,
                     res.accept_count,

@@ -38,6 +38,7 @@ import numpy as np
 
 from repro import workloads
 from repro.samplers.engine import parse_collect, resolve_execution
+from repro.samplers.plan import RunPlan
 from repro.serving.dispatch import SegmentPipeline, make_advance_fn
 
 _DUMMY_KEY = np.zeros((2,), np.uint32)  # free slots advance discarded work
@@ -297,10 +298,13 @@ class PackedExecutor:
                 else f"thin:{s.thin_k}" if s.mode == "thin"
                 else "last"
             )
-            res = self.engine.run(
-                self._keys[i], self.target, seg, words[i],
-                step0=int(s.progress), collect=collect,
-            )
+            res = self.engine.submit(
+                RunPlan(
+                    target=self.target, n_steps=seg, init_words=words[i],
+                    key=self._keys[i], step0=int(s.progress),
+                    collect=collect,
+                )
+            ).result
             if s.mode != "last" and res.samples.shape[0]:
                 s.pieces.append(res.samples)
             s.acc = (

@@ -26,7 +26,7 @@ import math
 
 import jax.numpy as jnp
 
-from repro.samplers import MHEngine
+from repro.samplers import MHEngine, RunPlan
 from repro.tempering.ladder import base_log_prob, scaled_target
 
 Array = jnp.ndarray
@@ -139,10 +139,13 @@ class Annealer:
         for beta in self.betas:
             # the best tracker folds over every visited state, so stage
             # runs pin collect="all" whatever the engine's default is
-            res = engine.run(
-                key, scaled_target(target, beta), self.steps_per_beta,
-                state, chain_id=chain_id, step0=step, collect="all",
-            )
+            res = engine.submit(
+                RunPlan(
+                    target=scaled_target(target, beta),
+                    n_steps=self.steps_per_beta, init_words=state, key=key,
+                    chain_id=chain_id, step0=step, collect="all",
+                )
+            ).result
             f = base_log_prob(target, res.samples).astype(jnp.float32)
             stage_words, stage_f = _stage_best(res.samples, f)
             if best_f is None:

@@ -45,7 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.diagnostics import SwapStats
-from repro.samplers import MHEngine, chain_key, parse_collect
+from repro.samplers import MHEngine, RunPlan, chain_key, parse_collect
 from repro.samplers.engine import resolve_execution
 from repro.tempering.ladder import Ladder, base_log_prob
 
@@ -82,10 +82,14 @@ class TemperedResult:
 )
 def _scan_segment(key, init, step0, *, engine, target, n_steps, chain_id):
     """One replica segment under scan execution, jitted with a *traced*
-    step0 — every segment of a run shares one trace per replica."""
-    return engine.run(
-        key, target, n_steps, init, chain_id=chain_id, step0=step0
+    step0 — every segment of a run shares one trace per replica.  Launches
+    through the RunPlan surface like every call site (DESIGN.md
+    §Run-API); plans tolerate traced offsets."""
+    plan = RunPlan(
+        target=target, n_steps=n_steps, init_words=init, key=key,
+        chain_id=chain_id, step0=step0,
     )
+    return engine.submit(plan).result
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,10 +161,13 @@ class ReplicaExchange:
                     )
                 else:  # pallas: static step0; kernel traces cache on
                     # (target, parity), not the offset, so eager is fine
-                    res = engine.run(
-                        key, targets[r], seg, states[r],
-                        chain_id=chain_id + r, step0=step,
-                    )
+                    res = engine.submit(
+                        RunPlan(
+                            target=targets[r], n_steps=seg,
+                            init_words=states[r], key=key,
+                            chain_id=chain_id + r, step0=step,
+                        )
+                    ).result
                 states[r] = res.final_words
                 pieces[r].append(res.samples)
                 acc[r] = (

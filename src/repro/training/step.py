@@ -179,7 +179,7 @@ def make_decode_sample_step(cfg, sampler_cfg: token_sampler.TokenSamplerConfig |
 
     def decode_sample_step(vals, tokens, cache, key):
         logits, new_cache = lm.decode_step(vals, cfg, tokens, cache)
-        result = token_sampler.sample_tokens(
+        result = token_sampler._sample_tokens_impl(
             key, logits[:, : cfg.vocab_size], scfg, init_tokens=tokens[:, 0]
         )
         return result.tokens[:, None], new_cache, result.acceptance_rate

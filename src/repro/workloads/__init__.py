@@ -41,12 +41,24 @@ class WorkloadRun:
     series_fn: Callable          # samples (K, *chain) -> (K, n_chains) stat
     meta: dict
 
+    def plan(self, key, mesh=None, **overrides) -> samplers.RunPlan:
+        """The workload's ``RunPlan`` (DESIGN.md §Run-API) — the spec
+        ``run`` submits; callers needing resume/checkpoint semantics take
+        this and drive it themselves (e.g. checkpoint.run_resumable)."""
+        spec = dict(
+            target=self.target,
+            n_steps=self.n_steps,
+            init_words=self.init_words,
+            key=key,
+            mesh=mesh,
+        )
+        spec.update(overrides)
+        return samplers.RunPlan(**spec)
+
     def run(self, key, mesh=None) -> samplers.EngineResult:
         """Run the chains; ``mesh`` shards the engine's chains axis
         (DESIGN.md §Chains-axis) and is a no-op for solo runs."""
-        return self.engine.run(
-            key, self.target, self.n_steps, self.init_words, mesh=mesh
-        )
+        return self.engine.submit(self.plan(key, mesh=mesh)).result
 
     def series(self, result: samplers.EngineResult) -> np.ndarray:
         """(T, n_columns) scalar-statistic block; a multi-chain run's
@@ -63,14 +75,24 @@ class WorkloadRun:
         ]
         return np.concatenate(cols, axis=1)
 
-    def _rate_entry(self, result: samplers.EngineResult) -> tuple[str, float]:
-        """(label, value) for the engine's accept/flip rate — Gibbs has no
-        reject, so its count is a flip count (DESIGN.md §2)."""
-        label = (
+    @property
+    def rate_key(self) -> str:
+        """THE canonical label for the engine's accept/flip rate — Gibbs
+        has no reject, so its count is a flip count (DESIGN.md §2):
+        ``acceptance_rate`` for mh, ``flip_rate`` for gibbs.  Diagnostics,
+        the CLI, and the bench tables all spell it through here (bench
+        rows keep a legacy ``acceptance`` alias column for old readers)."""
+        return (
             "flip_rate" if self.engine.config.update == "gibbs"
             else "acceptance_rate"
         )
-        return label, round(float(result.acceptance_rate), 4)
+
+    def rate_entry(self, result: samplers.EngineResult) -> tuple[str, float]:
+        """(canonical label, value) for the engine's accept/flip rate."""
+        return self.rate_key, round(float(result.acceptance_rate), 4)
+
+    # pre-rename spelling, kept for external callers
+    _rate_entry = rate_entry
 
     def kept_burn_in(self) -> int:
         """``burn_in`` translated to the collected stream's row index:

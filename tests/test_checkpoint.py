@@ -1,0 +1,222 @@
+"""Bit-exact resumable runs (checkpoint/resume.py): segmented +
+checkpointed == unsegmented, across every update x randomness cell, with
+kill/restart, fingerprint refusal, and the collection axis riding along."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import samplers, workloads
+from repro.checkpoint import latest_step, run_resumable
+from repro.workloads.ising import IsingModel
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _mh_setup(seed=0):
+    table = jax.random.normal(jax.random.PRNGKey(seed), (2, 64), jnp.float32)
+    target = samplers.TableTarget(table)
+    init = jnp.broadcast_to(
+        jnp.argmax(table, -1).astype(jnp.uint32)[:, None], (2, 8)
+    )
+    return target, init
+
+
+def _gibbs_setup(seed=1):
+    model = IsingModel(height=6, width=6)
+    return model, model.random_init(jax.random.PRNGKey(seed), 2)
+
+
+def _assert_bit_identical(got, ref):
+    np.testing.assert_array_equal(
+        np.asarray(got.samples), np.asarray(ref.samples)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got.accept_count), np.asarray(ref.accept_count)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got.acceptance_rate), np.asarray(ref.acceptance_rate)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got.final_words), np.asarray(ref.final_words)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got.final_logp), np.asarray(ref.final_logp)
+    )
+
+
+class TestRoundTrip:
+    @pytest.mark.parametrize("update", ["mh", "gibbs"])
+    @pytest.mark.parametrize("randomness", ["host", "cim", "fused"])
+    def test_segmented_equals_unsegmented(self, tmp_path, update, randomness):
+        target, init = _gibbs_setup() if update == "gibbs" else _mh_setup()
+        engine = samplers.MHEngine(
+            samplers.EngineConfig(
+                update=update, randomness=randomness, chunk_steps=8
+            )
+        )
+        key = jax.random.PRNGKey(3)
+        plan = samplers.RunPlan(
+            target=target, n_steps=28, init_words=init, key=key
+        )
+        ref = engine.submit(plan).result
+        handle = run_resumable(
+            engine, plan, directory=str(tmp_path), every=10
+        )
+        _assert_bit_identical(handle.result, ref)
+
+    @pytest.mark.parametrize("collect", [None, "last"])
+    def test_multi_chain_round_trip(self, tmp_path, collect):
+        """Multi-chain results are chain-major (C, T, *state): segment
+        streams must concatenate on the time axis, not the chain axis."""
+        target, init = _mh_setup()
+        cinit = jnp.broadcast_to(init, (4, *init.shape))
+        engine = samplers.MHEngine(
+            samplers.EngineConfig(num_chains=4, chunk_steps=8)
+        )
+        plan = samplers.RunPlan(
+            target=target, n_steps=24, init_words=cinit, seed=6,
+            collect=collect,
+        )
+        ref = engine.submit(plan).result
+        handle = run_resumable(
+            engine, plan, directory=str(tmp_path), every=8
+        )
+        _assert_bit_identical(handle.result, ref)
+
+    @pytest.mark.parametrize("collect", ["thin:4", "last"])
+    def test_collection_axis_round_trip(self, tmp_path, collect):
+        target, init = _mh_setup()
+        engine = samplers.MHEngine(
+            samplers.EngineConfig(chunk_steps=8, collect=collect)
+        )
+        key = jax.random.PRNGKey(4)
+        plan = samplers.RunPlan(
+            target=target, n_steps=24, init_words=init, key=key
+        )
+        ref = engine.submit(plan).result
+        handle = run_resumable(engine, plan, directory=str(tmp_path), every=8)
+        _assert_bit_identical(handle.result, ref)
+
+
+class TestKillAndResume:
+    def test_killed_run_resumes_bit_exactly(self, tmp_path):
+        target, init = _mh_setup()
+        engine = samplers.MHEngine(samplers.EngineConfig(chunk_steps=8))
+        key = jax.random.PRNGKey(7)
+        plan = samplers.RunPlan(
+            target=target, n_steps=32, init_words=init, key=key
+        )
+        ref = engine.submit(plan).result
+
+        class Die(RuntimeError):
+            pass
+
+        def die_after_two(done, total, handle):
+            if done >= 16:
+                raise Die
+
+        with pytest.raises(Die):
+            run_resumable(
+                engine, plan, directory=str(tmp_path), every=8,
+                on_segment=die_after_two,
+            )
+        # the kill landed after the step-16 checkpoint committed
+        assert latest_step(str(tmp_path)) == 16
+        handle = run_resumable(engine, plan, directory=str(tmp_path), every=8)
+        _assert_bit_identical(handle.result, ref)
+
+    def test_resume_under_retuned_engine(self, tmp_path):
+        """chunk_steps/execution are excluded from the resume
+        fingerprint: a run checkpointed under one tuning resumes
+        bit-exactly under another (the autotuner contract)."""
+        target, init = _mh_setup()
+        key = jax.random.PRNGKey(8)
+        a = samplers.MHEngine(samplers.EngineConfig(chunk_steps=8))
+        b = samplers.MHEngine(
+            samplers.EngineConfig(chunk_steps=16, execution="scan")
+        )
+        plan = samplers.RunPlan(
+            target=target, n_steps=24, init_words=init, key=key
+        )
+        ref = a.submit(plan).result
+
+        class Die(RuntimeError):
+            pass
+
+        def die_once(done, total, handle):
+            if done >= 8:
+                raise Die
+
+        with pytest.raises(Die):
+            run_resumable(
+                a, plan, directory=str(tmp_path), every=8,
+                on_segment=die_once,
+            )
+        handle = run_resumable(b, plan, directory=str(tmp_path), every=8)
+        _assert_bit_identical(handle.result, ref)
+
+    def test_completed_run_replays_from_checkpoint(self, tmp_path):
+        target, init = _mh_setup()
+        engine = samplers.MHEngine(samplers.EngineConfig(chunk_steps=8))
+        plan = samplers.RunPlan(
+            target=target, n_steps=16, init_words=init, seed=5
+        )
+        first = run_resumable(engine, plan, directory=str(tmp_path), every=8)
+        again = run_resumable(engine, plan, directory=str(tmp_path), every=8)
+        _assert_bit_identical(again.result, first.result)
+
+
+class TestFingerprint:
+    def test_mismatched_stream_refused(self, tmp_path):
+        target, init = _mh_setup()
+        engine = samplers.MHEngine(samplers.EngineConfig(chunk_steps=8))
+        plan = samplers.RunPlan(
+            target=target, n_steps=16, init_words=init, seed=0
+        )
+        run_resumable(engine, plan, directory=str(tmp_path), every=8)
+        other = plan.replace(seed=1)
+        with pytest.raises(ValueError, match="different run"):
+            run_resumable(engine, other, directory=str(tmp_path), every=8)
+
+    def test_mismatched_engine_axes_refused(self, tmp_path):
+        target, init = _mh_setup()
+        a = samplers.MHEngine(samplers.EngineConfig(randomness="cim"))
+        b = samplers.MHEngine(samplers.EngineConfig(randomness="host"))
+        plan = samplers.RunPlan(
+            target=target, n_steps=16, init_words=init, seed=0
+        )
+        run_resumable(a, plan, directory=str(tmp_path), every=8)
+        with pytest.raises(ValueError, match="different run"):
+            run_resumable(b, plan, directory=str(tmp_path), every=8)
+
+    def test_handle_save_records_fingerprint(self, tmp_path):
+        from repro.checkpoint import load_checkpoint_tree
+
+        target, init = _mh_setup()
+        engine = samplers.MHEngine(samplers.EngineConfig(chunk_steps=8))
+        plan = samplers.RunPlan(
+            target=target, n_steps=8, init_words=init, seed=2
+        )
+        handle = engine.submit(plan)
+        handle.save(str(tmp_path))
+        tree, manifest = load_checkpoint_tree(str(tmp_path), handle.progress)
+        assert manifest["extra"]["fingerprint"] == plan.fingerprint(engine)
+        np.testing.assert_array_equal(
+            tree["words"], np.asarray(handle.final_words)
+        )
+
+
+class TestWorkloadResume:
+    def test_workload_diagnostics_survive_resume(self, tmp_path):
+        """The full production recipe: a workload's RunPlan driven by
+        run_resumable yields the same diagnostics as the direct run."""
+        k_init, k_run = jax.random.split(jax.random.PRNGKey(0))
+        wl = workloads.build("ising", k_init, smoke=True, backend="scan")
+        ref = wl.run(k_run)
+        handle = run_resumable(
+            wl.engine, wl.plan(k_run), directory=str(tmp_path), every=16
+        )
+        _assert_bit_identical(handle.result, ref)
+        assert wl.diagnostics(handle.result) == wl.diagnostics(ref)
