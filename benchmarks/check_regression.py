@@ -71,7 +71,27 @@ MEASURED_FIELDS = frozenset({
     "p50_latency_s",
     "p99_latency_s",
     "mean_wait_s",
+    # wait-vs-service decomposition (serving/scheduler.latency_summary)
+    "p99_wait_s",
+    "mean_service_s",
+    "p50_service_s",
+    "p99_service_s",
+    # telemetry table (benchmarks/bench_telemetry.py): the disabled-mode
+    # overhead contract plus trace volume and the compile/steady split
+    "base_site_steps_per_s",
+    "disabled_overhead_pct",
+    "trace_events",
+    "submit_calls",
+    "compile_s",
+    "steady_s",
 })
+
+# a fresh row reporting disabled-mode telemetry overhead above its
+# budget fails the gate outright — the overhead contract is absolute,
+# not relative to the baseline row
+OVERHEAD_FIELD = "disabled_overhead_pct"
+OVERHEAD_BUDGET_FIELD = "overhead_budget_pct"
+DEFAULT_OVERHEAD_BUDGET_PCT = 2.0
 
 THROUGHPUT_FIELD = "site_steps_per_s"
 CALIBRATION_FIELD = "calib_steps_per_s"
@@ -115,6 +135,22 @@ def compare(
     the calibration factor only models compute throughput."""
     failures = []
     compared = 0
+    # absolute gates on fresh rows (no baseline counterpart needed)
+    for table in sorted(fresh):
+        for row in fresh[table]:
+            if OVERHEAD_FIELD not in row:
+                continue
+            compared += 1
+            budget = float(
+                row.get(OVERHEAD_BUDGET_FIELD, DEFAULT_OVERHEAD_BUDGET_PCT)
+            )
+            got = float(row[OVERHEAD_FIELD])
+            if got > budget:
+                failures.append(
+                    f"OVERHEAD  {table}: "
+                    + " ".join(f"{k}={v}" for k, v in row_identity(row))
+                    + f": {OVERHEAD_FIELD} {got:.2f}% > budget {budget:g}%"
+                )
     for table in sorted(set(fresh) & set(baseline)):
         base_rows = {
             row_identity(r): r

@@ -44,6 +44,7 @@ MODULES = [
     ("tempering", "benchmarks.bench_tempering"),
     ("collection", "benchmarks.bench_collection"),
     ("serving", "benchmarks.bench_serving"),
+    ("telemetry", "benchmarks.bench_telemetry"),
 ]
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -82,11 +83,43 @@ def build_parser() -> argparse.ArgumentParser:
         "--out", default=AGGREGATE_PATH,
         help=f"aggregate JSON path (default {AGGREGATE_PATH})",
     )
+    p.add_argument(
+        "--trace-dir", default=None, metavar="DIR",
+        help="record a telemetry trace per bench module and export "
+        "DIR/<table>.trace.jsonl artifacts (summarize/validate with "
+        "python -m repro.launch.monitor)",
+    )
     return p
+
+
+def _export_module_trace(trace_dir: str, name: str) -> None:
+    """One trace artifact per bench module, plus the compile/steady
+    split its engine.submit spans carry (printed, not tabled — the
+    gated compile_s/steady_s fields live in the telemetry table)."""
+    from repro import telemetry
+
+    path = os.path.join(trace_dir, f"{name}.trace.jsonl")
+    events = telemetry.TRACER.events()
+    n = telemetry.TRACER.export_jsonl(path)
+    submit = [
+        e for e in events if e.kind == "span" and e.name == "engine.submit"
+    ]
+    compile_s = sum(
+        e.dur_us for e in submit if e.meta.get("jit_cache") == "miss"
+    ) / 1e6
+    steady_s = sum(
+        e.dur_us for e in submit if e.meta.get("jit_cache") != "miss"
+    ) / 1e6
+    print(
+        f"  [trace] {n} events -> {path} (submit compile_s="
+        f"{compile_s:.3f} steady_s={steady_s:.3f})"
+    )
 
 
 def main(argv=None) -> None:
     args = build_parser().parse_args(argv)
+    if args.trace_dir:
+        os.makedirs(args.trace_dir, exist_ok=True)
     failures = []
     tables = {}
     for name, modpath in MODULES:
@@ -101,12 +134,16 @@ def main(argv=None) -> None:
                     print("  [skipped: no smoke presets]")
                     continue
                 name = f"{name}_smoke"
-                rows = mod.run(smoke=True)
-            else:
-                rows = mod.run()
+            if args.trace_dir:
+                from repro import telemetry
+
+                telemetry.enable()  # reset: one trace per module
+            rows = mod.run(smoke=True) if args.smoke else mod.run()
             for row in rows:
                 print("  " + "  ".join(f"{k}={v}" for k, v in row.items()))
             print(f"  [{len(rows)} rows, {time.time() - t0:.1f}s]")
+            if args.trace_dir:
+                _export_module_trace(args.trace_dir, name)
             tables[name] = rows
         except Exception as e:  # keep the harness going; report at the end
             import traceback

@@ -32,6 +32,8 @@ import threading
 import jax
 import numpy as np
 
+from repro import telemetry
+
 
 @dataclasses.dataclass(frozen=True)
 class CheckpointConfig:
@@ -57,6 +59,18 @@ def _sha256(path: str) -> str:
     return h.hexdigest()
 
 
+def checkpoint_nbytes(path: str) -> int:
+    """Total on-disk bytes of a committed checkpoint (leaf files +
+    manifest) — what the save/restore telemetry reports."""
+    total = 0
+    for name in os.listdir(path):
+        try:
+            total += os.path.getsize(os.path.join(path, name))
+        except OSError:
+            pass
+    return total
+
+
 def save_checkpoint(directory: str, step: int, tree, extra: dict | None = None):
     """Atomic, integrity-hashed save of an arbitrary pytree.
 
@@ -73,30 +87,46 @@ def save_checkpoint(directory: str, step: int, tree, extra: dict | None = None):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
 
-    items, treedef = _flatten_with_paths(tree)
-    manifest = {
-        "step": step,
-        "treedef": str(treedef),
-        "extra": extra or {},
-        "leaves": [],
-    }
-    for i, (key, leaf) in enumerate(items):
-        arr = np.asarray(jax.device_get(leaf))
-        fname = f"leaf_{i:05d}.npy"
-        fpath = os.path.join(tmp, fname)
-        np.save(fpath, arr, allow_pickle=False)
-        manifest["leaves"].append(
-            {
-                "key": key,
-                "file": fname,
-                "shape": list(arr.shape),
-                "dtype": str(arr.dtype),
-                "sha256": _sha256(fpath),
-            }
-        )
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=1)
-    os.replace(tmp, final)  # atomic commit
+    with telemetry.span("checkpoint.save", step=step) as sp:
+        items, treedef = _flatten_with_paths(tree)
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "extra": extra or {},
+            "leaves": [],
+        }
+        nbytes = 0
+        for i, (key, leaf) in enumerate(items):
+            arr = np.asarray(jax.device_get(leaf))
+            fname = f"leaf_{i:05d}.npy"
+            fpath = os.path.join(tmp, fname)
+            np.save(fpath, arr, allow_pickle=False)
+            nbytes += os.path.getsize(fpath)
+            manifest["leaves"].append(
+                {
+                    "key": key,
+                    "file": fname,
+                    "shape": list(arr.shape),
+                    "dtype": str(arr.dtype),
+                    "sha256": _sha256(fpath),
+                }
+            )
+        mpath = os.path.join(tmp, "manifest.json")
+        with open(mpath, "w") as f:
+            json.dump(manifest, f, indent=1)
+        nbytes += os.path.getsize(mpath)
+        os.replace(tmp, final)  # atomic commit
+        sp.set(leaves=len(items), bytes=nbytes)
+    telemetry.counter(
+        "checkpoint_bytes_written_total", "committed checkpoint bytes"
+    ).inc(nbytes)
+    telemetry.counter(
+        "checkpoint_saves_total", "committed checkpoint saves"
+    ).inc()
+    telemetry.log(
+        "checkpoint.saved",
+        step=step, leaves=len(items), bytes=nbytes, path=final,
+    )
     return final
 
 
@@ -125,29 +155,31 @@ def load_checkpoint(
     *current* mesh) or None (host/SingleDevice arrays).
     """
     path = os.path.join(directory, f"step_{step:08d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    with telemetry.span("checkpoint.restore", step=step, verify=verify) as sp:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
 
-    items, treedef = _flatten_with_paths(like_tree)
-    by_key = {e["key"]: e for e in manifest["leaves"]}
-    leaves = []
-    shard_list = (
-        jax.tree.leaves(shardings) if shardings is not None else [None] * len(items)
-    )
-    for (key, like), sh in zip(items, shard_list):
-        entry = by_key.get(key)
-        if entry is None:
-            raise KeyError(f"checkpoint {path} is missing leaf {key!r}")
-        fpath = os.path.join(path, entry["file"])
-        if verify and _sha256(fpath) != entry["sha256"]:
-            raise IOError(f"integrity check failed for {fpath}")
-        arr = np.load(fpath, allow_pickle=False)
-        if list(arr.shape) != list(np.shape(like)):
-            raise ValueError(
-                f"leaf {key}: checkpoint shape {arr.shape} != expected "
-                f"{np.shape(like)} — config/checkpoint mismatch"
-            )
-        leaves.append(jax.device_put(arr, sh) if sh is not None else arr)
+        items, treedef = _flatten_with_paths(like_tree)
+        by_key = {e["key"]: e for e in manifest["leaves"]}
+        leaves = []
+        shard_list = (
+            jax.tree.leaves(shardings) if shardings is not None else [None] * len(items)
+        )
+        for (key, like), sh in zip(items, shard_list):
+            entry = by_key.get(key)
+            if entry is None:
+                raise KeyError(f"checkpoint {path} is missing leaf {key!r}")
+            fpath = os.path.join(path, entry["file"])
+            if verify and _sha256(fpath) != entry["sha256"]:
+                raise IOError(f"integrity check failed for {fpath}")
+            arr = np.load(fpath, allow_pickle=False)
+            if list(arr.shape) != list(np.shape(like)):
+                raise ValueError(
+                    f"leaf {key}: checkpoint shape {arr.shape} != expected "
+                    f"{np.shape(like)} — config/checkpoint mismatch"
+                )
+            leaves.append(jax.device_put(arr, sh) if sh is not None else arr)
+        sp.set(leaves=len(items), bytes=checkpoint_nbytes(path))
     return jax.tree.unflatten(jax.tree.structure(like_tree), leaves), manifest
 
 
@@ -163,14 +195,16 @@ def load_checkpoint_tree(directory: str, step: int, verify: bool = True):
     reshardable restore.
     """
     path = os.path.join(directory, f"step_{step:08d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
-    tree = {}
-    for entry in manifest["leaves"]:
-        fpath = os.path.join(path, entry["file"])
-        if verify and _sha256(fpath) != entry["sha256"]:
-            raise IOError(f"integrity check failed for {fpath}")
-        tree[entry["key"]] = np.load(fpath, allow_pickle=False)
+    with telemetry.span("checkpoint.restore", step=step, verify=verify) as sp:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        tree = {}
+        for entry in manifest["leaves"]:
+            fpath = os.path.join(path, entry["file"])
+            if verify and _sha256(fpath) != entry["sha256"]:
+                raise IOError(f"integrity check failed for {fpath}")
+            tree[entry["key"]] = np.load(fpath, allow_pickle=False)
+        sp.set(leaves=len(tree), bytes=checkpoint_nbytes(path))
     return tree, manifest
 
 

@@ -34,13 +34,20 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.checkpoint.checkpoint import (
+    checkpoint_nbytes,
     latest_step,
     load_checkpoint_tree,
     save_checkpoint,
 )
 from repro.samplers.engine import EngineResult, MHEngine, parse_collect
-from repro.samplers.plan import RunHandle, RunPlan, carries_logp
+from repro.samplers.plan import (
+    RunHandle,
+    RunPlan,
+    carries_logp,
+    fingerprint_digest,
+)
 
 
 def _time_axis(engine: MHEngine) -> int:
@@ -115,6 +122,7 @@ def run_resumable(
     )
     axis = _time_axis(engine)
     fingerprint = plan.fingerprint(engine)
+    fp = fingerprint_digest(fingerprint)
 
     # -- restore ------------------------------------------------------------
     done = 0
@@ -144,8 +152,14 @@ def run_resumable(
         logp = tree["logp"]
         if mode != "last":
             pieces = [tree["samples"]]
+        telemetry.log(
+            "run_resumable.restore",
+            fingerprint=fp, step=int(step), done=int(done),
+            total=n_total, directory=directory,
+        )
 
     handle = None
+    segment = 0
     while done < n_total:
         seg = min(every, n_total - done)
         if handle is None:
@@ -171,7 +185,7 @@ def run_resumable(
         words = handle.final_words
         logp = handle.final_logp
         done += seg
-        save_checkpoint(
+        ckpt_path = save_checkpoint(
             directory,
             base + done,
             {
@@ -192,6 +206,16 @@ def run_resumable(
                 "total_steps": n_total,
             },
         )
+        telemetry.log(
+            "run_resumable.segment",
+            fingerprint=fp, segment=segment, step=base + done,
+            done=done, total=n_total,
+            bytes=checkpoint_nbytes(ckpt_path),
+        )
+        telemetry.counter(
+            "resume_segments_total", "checkpointed segments committed"
+        ).inc()
+        segment += 1
         if len(pieces) > 1:  # keep the accumulated stream as one block
             pieces = [np.concatenate(pieces, axis=axis)]
         if on_segment is not None:

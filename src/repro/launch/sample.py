@@ -57,7 +57,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import diagnostics, samplers, tempering, workloads
+from repro import diagnostics, samplers, telemetry, tempering, workloads
 from repro.core import energy
 from repro.launch.mesh import make_chains_mesh
 
@@ -146,7 +146,34 @@ def build_parser() -> argparse.ArgumentParser:
         "--beta-max", type=float, default=4.0,
         help="annealing end beta (annealing only; ladders end at 1.0)",
     )
+    # telemetry (DESIGN.md §Telemetry)
+    p.add_argument(
+        "--trace", default=None, metavar="PATH",
+        help="record host-side trace spans and export on exit: "
+        "*.json/*.trace -> Chrome-trace (chrome://tracing / Perfetto), "
+        "anything else -> JSONL (validate/summarize with "
+        "python -m repro.launch.monitor)",
+    )
+    p.add_argument(
+        "--metrics", default=None, metavar="PATH",
+        help="write the final metrics snapshot: *.prom/*.txt -> "
+        "Prometheus exposition text, anything else -> one JSONL line",
+    )
     return p
+
+
+def _export_telemetry(args) -> None:
+    if args.trace:
+        n = telemetry.TRACER.export(args.trace)
+        print(f"[trace] wrote {n} events to {args.trace}")
+        telemetry.disable()
+    if args.metrics:
+        if args.metrics.endswith((".prom", ".txt")):
+            with open(args.metrics, "w") as f:
+                f.write(telemetry.REGISTRY.prometheus_text())
+        else:
+            telemetry.REGISTRY.flush_jsonl(args.metrics)
+        print(f"[metrics] wrote snapshot to {args.metrics}")
 
 
 def _collect_arg(args) -> str:
@@ -194,7 +221,7 @@ def _series_diagnostics(wl, samples) -> dict:
     return diagnostics.summarize(series[wl.burn_in:])
 
 
-def _run_ladder(args, wl, k_run) -> dict:
+def _run_ladder(args, wl, k_run, monitor) -> dict:
     ladder = tempering.Ladder.geometric(args.ladder, beta_min=args.beta_min)
     rex = tempering.ReplicaExchange(
         ladder=ladder, engine=wl.engine, swap_every=args.swap_every
@@ -209,6 +236,11 @@ def _run_ladder(args, wl, k_run) -> dict:
 
     site_steps = wl.n_steps * int(init.size)
     diag = _series_diagnostics(wl, result.cold_samples)
+    monitor.check_acceptance(
+        float(result.acceptance_rate), label=_rate_key(wl), where=wl.name
+    )
+    monitor.check_swap_stats(result.swap, where=wl.name)
+    monitor.check_chain_stats(diag, where=wl.name)
     row = {
         "mode": "ladder",
         "num_replicas": ladder.num_replicas,
@@ -235,7 +267,7 @@ def _run_ladder(args, wl, k_run) -> dict:
     return row
 
 
-def _run_anneal(args, wl, k_run) -> dict:
+def _run_anneal(args, wl, k_run, monitor) -> dict:
     annealer = tempering.Annealer.geometric(
         args.anneal,
         max(1, wl.n_steps // args.anneal),
@@ -249,6 +281,9 @@ def _run_anneal(args, wl, k_run) -> dict:
 
     site_steps = result.n_steps * int(wl.init_words.size)
     best_logp = np.asarray(result.best_logp)
+    monitor.check_acceptance(
+        float(result.acceptance_rate), label=_rate_key(wl), where=wl.name
+    )
     row = {
         "mode": "anneal",
         "stages": args.anneal,
@@ -286,6 +321,9 @@ def main(argv=None) -> dict:
             "drivers consume the full segment streams for their own "
             "diagnostics/best-state tracking"
         )
+    if args.trace:
+        telemetry.enable()
+    monitor = telemetry.HealthMonitor(warn=False)
     key = jax.random.PRNGKey(args.seed)
     k_init, k_run = jax.random.split(key)
     wl = workloads.build(args.workload, k_init, **_workload_kwargs(args))
@@ -309,42 +347,48 @@ def main(argv=None) -> dict:
             " vs incumbent)"
         )
     if args.ladder:
-        row = {**base, **_run_ladder(args, wl, k_run)}
-        print("  ".join(f"{k}={v}" for k, v in row.items()))
-        return row
-    if args.anneal:
-        row = {**base, **_run_anneal(args, wl, k_run)}
-        print("  ".join(f"{k}={v}" for k, v in row.items()))
-        return row
+        row = {**base, **_run_ladder(args, wl, k_run, monitor)}
+    elif args.anneal:
+        row = {**base, **_run_anneal(args, wl, k_run, monitor)}
+    else:
+        mesh = make_chains_mesh(args.num_chains)
+        t0 = time.time()
+        result = wl.run(k_run, mesh=mesh)
+        jax.block_until_ready(result.samples)
+        wall_s = time.time() - t0
 
-    mesh = make_chains_mesh(args.num_chains)
-    t0 = time.time()
-    result = wl.run(k_run, mesh=mesh)
-    jax.block_until_ready(result.samples)
-    wall_s = time.time() - t0
+        diag = wl.diagnostics(result)
+        monitor.check_acceptance(
+            float(result.acceptance_rate), label=_rate_key(wl), where=wl.name
+        )
+        monitor.check_chain_stats(diag, where=wl.name)
+        n_sites = int(wl.init_words.size)
+        site_steps = wl.n_steps * n_sites
+        nbits = int(wl.meta.get("nbits", wl.target.nbits))
+        macro_fj = energy.energy_per_sample_fj(
+            float(result.acceptance_rate), nbits
+        ) * site_steps
 
-    diag = wl.diagnostics(result)
-    n_sites = int(wl.init_words.size)
-    site_steps = wl.n_steps * n_sites
-    nbits = int(wl.meta.get("nbits", wl.target.nbits))
-    macro_fj = energy.energy_per_sample_fj(
-        float(result.acceptance_rate), nbits
-    ) * site_steps
-
-    row = {
-        **base,
-        "n_steps": wl.n_steps,
-        "burn_in": wl.burn_in,
-        "n_sites": n_sites,
-        "wall_s": round(wall_s, 3),
-        "site_steps_per_s": round(site_steps / max(wall_s, 1e-9), 1),
-        "macro_energy_pj": round(macro_fj * 1e-3, 2),
-        **{k: v for k, v in wl.meta.items() if k != "nbits"},
-        # diagnostics run on the post-burn-in series; disambiguate its
-        # step count from the chain's
-        **{("kept_steps" if k == "n_steps" else k): v for k, v in diag.items()},
-    }
+        row = {
+            **base,
+            "n_steps": wl.n_steps,
+            "burn_in": wl.burn_in,
+            "n_sites": n_sites,
+            "wall_s": round(wall_s, 3),
+            "site_steps_per_s": round(site_steps / max(wall_s, 1e-9), 1),
+            "macro_energy_pj": round(macro_fj * 1e-3, 2),
+            **{k: v for k, v in wl.meta.items() if k != "nbits"},
+            # diagnostics run on the post-burn-in series; disambiguate
+            # its step count from the chain's
+            **{
+                ("kept_steps" if k == "n_steps" else k): v
+                for k, v in diag.items()
+            },
+        }
     print("  ".join(f"{k}={v}" for k, v in row.items()))
+    for alert in monitor.alerts:
+        print(f"[health] {alert.severity} {alert.kind}: {alert.message}")
+    _export_telemetry(args)
     return row
 
 

@@ -34,7 +34,7 @@ import json
 
 import numpy as np
 
-from repro import workloads
+from repro import telemetry, workloads
 from repro.serving import Scheduler, ServeRequest, latency_summary
 
 
@@ -98,6 +98,29 @@ def build_parser() -> argparse.ArgumentParser:
         help="sleep through arrival gaps instead of fast-forwarding",
     )
     p.add_argument("--seed", type=int, default=0, help="arrival-process seed")
+    # telemetry + SLO health (DESIGN.md §Telemetry)
+    p.add_argument(
+        "--trace", default=None, metavar="PATH",
+        help="record host-side trace spans and export on exit "
+        "(*.json/*.trace -> Chrome-trace, else JSONL)",
+    )
+    p.add_argument(
+        "--metrics", default=None, metavar="PATH",
+        help="flush metrics snapshots: *.prom/*.txt -> final Prometheus "
+        "text, anything else -> periodic JSONL lines from the serve loop",
+    )
+    p.add_argument(
+        "--metrics-interval", type=float, default=5.0,
+        help="seconds between periodic JSONL metrics flushes",
+    )
+    p.add_argument(
+        "--slo-p99", type=float, default=None, metavar="SECONDS",
+        help="p99 end-to-end latency SLO; breach prints a [health] line",
+    )
+    p.add_argument(
+        "--slo-wait", type=float, default=None, metavar="SECONDS",
+        help="p99 queue-wait SLO; breach prints a [health] line",
+    )
     return p
 
 
@@ -172,6 +195,8 @@ def main(argv=None) -> dict:
             f"({tuned.source}, {tuned.steps_per_s:.3g} site-steps/s vs "
             f"incumbent {tuned.baseline_steps_per_s:.3g})"
         )
+    if args.trace:
+        telemetry.enable()
     sched = Scheduler(
         n_slots=args.slots,
         randomness=args.randomness,
@@ -179,22 +204,49 @@ def main(argv=None) -> dict:
         smoke=args.smoke,
         chunk_steps=chunk_steps,
     )
+    if args.metrics and not args.metrics.endswith((".prom", ".txt")):
+        sched.metrics_flusher = telemetry.JsonlFlusher(
+            telemetry.REGISTRY, args.metrics,
+            interval_s=args.metrics_interval,
+        )
     done = sched.serve(requests, realtime=args.realtime)
     for r in sorted(done, key=lambda r: r.rid):
         n_kept = 0 if r.samples is None else r.samples.shape[0]
         print(
             f"  req {r.rid}: workload={r.workload} steps="
             f"{r.n_steps or 'default'} collect={r.collect} kept={n_kept} "
-            f"wait_s={r.wait_s:.3f} latency_s={r.latency_s:.3f} "
+            f"wait_s={r.wait_s:.3f} service_s={r.service_s:.3f} "
+            f"latency_s={r.latency_s:.3f} "
             f"{r.rate_label}={r.acceptance_rate:.4f}"
         )
+    summary = latency_summary(done)
     row = {
         "slots": args.slots,
         "randomness": args.randomness,
         "backend": args.backend,
-        **latency_summary(done),
+        **summary,
     }
     print("[serve_engine] " + "  ".join(f"{k}={v}" for k, v in row.items()))
+    monitor = telemetry.HealthMonitor(
+        telemetry.HealthThresholds(
+            p99_latency_slo_s=args.slo_p99, max_wait_slo_s=args.slo_wait
+        ),
+        warn=False,
+    )
+    monitor.check_serving(summary, where=args.workload)
+    for alert in monitor.alerts:
+        print(f"[health] {alert.severity} {alert.kind}: {alert.message}")
+    if args.trace:
+        n = telemetry.TRACER.export(args.trace)
+        print(f"[trace] wrote {n} events to {args.trace}")
+        telemetry.disable()
+    if args.metrics:
+        if args.metrics.endswith((".prom", ".txt")):
+            with open(args.metrics, "w") as f:
+                f.write(telemetry.REGISTRY.prometheus_text())
+        else:
+            sched.metrics_flusher.close()
+        print(f"[metrics] wrote snapshot to {args.metrics}")
     return row
 
 

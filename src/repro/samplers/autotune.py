@@ -35,6 +35,7 @@ import time
 
 import jax
 
+from repro import telemetry
 from repro.samplers.engine import EngineConfig, MHEngine, resolve_execution
 from repro.samplers.plan import RunPlan
 
@@ -225,19 +226,33 @@ def autotune_config(
         cand_cfg = dataclasses.replace(
             config, chunk_steps=chunk, block_c=block_c, execution=execution
         )
-        try:
-            rate = measure_config(
-                cand_cfg, target, init_words, key=key, n_steps=n_steps,
-                repeats=repeats,
-            )
-        except Exception:
-            if i == 0:  # the incumbent must run — nothing to fall back to
-                raise
-            continue
+        with telemetry.span(
+            "autotune.measure",
+            chunk_steps=chunk, block_c=block_c, execution=execution,
+            incumbent=(i == 0),
+        ) as sp:
+            try:
+                rate = measure_config(
+                    cand_cfg, target, init_words, key=key, n_steps=n_steps,
+                    repeats=repeats,
+                )
+            except Exception:
+                sp.set(outcome="ineligible")
+                if i == 0:  # the incumbent must run — no fallback
+                    raise
+                continue
+            sp.set(outcome="ok", steps_per_s=round(rate, 1))
         measured.append((chunk, block_c, execution, rate))
 
     baseline_rate = measured[0][3]
     chunk, block_c, execution, rate = max(measured, key=lambda m: m[3])
+    telemetry.log(
+        "autotune.result",
+        chunk_steps=chunk, block_c=block_c, execution=execution,
+        steps_per_s=round(rate, 1),
+        baseline_steps_per_s=round(baseline_rate, 1),
+        candidates=len(measured),
+    )
     result = TuneResult(
         chunk_steps=chunk,
         block_c=block_c,

@@ -31,17 +31,39 @@ one-dispatch entry that replaced ``run_engine`` (now a deprecated shim).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 from functools import partial
 from typing import Any
 
 import jax
 
+from repro import telemetry
 from repro.samplers.engine import (
     EngineResult,
     MHEngine,
     parse_collect,
     resolve_execution,
 )
+
+
+def fingerprint_digest(fingerprint: dict) -> str:
+    """A short stable identity of a :meth:`RunPlan.fingerprint` dict —
+    what the telemetry log lines print so killed-run forensics can match
+    checkpoints to runs without dumping the whole key."""
+    blob = json.dumps(fingerprint, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:12]
+
+
+def _host_side() -> bool:
+    """True outside any jax trace — telemetry spans only make sense (and
+    only read python ints safely) at the host level; traced re-entries
+    (the serving tier's vmapped advance, tempering's jitted segments)
+    skip instrumentation entirely."""
+    try:
+        return jax.core.trace_state_clean()
+    except AttributeError:  # pragma: no cover - newer jax moved it
+        return True
 
 
 def carries_logp(engine: "MHEngine", target) -> bool:
@@ -242,19 +264,32 @@ class RunHandle:
         """Checkpoint the resume carry (words/logp/accept) at this
         handle's absolute step via ``repro.checkpoint`` — the durable
         twin of :meth:`resume_plan` (see checkpoint/resume.py for the
-        full segment-loop driver)."""
+        full segment-loop driver).  Emits a structured
+        ``run_handle.save`` telemetry log line (fingerprint digest, step,
+        path) so killed-run forensics can match the checkpoint to its
+        run without re-running anything."""
         from repro.checkpoint import save_checkpoint  # lazy: no cycle
 
-        return save_checkpoint(
-            directory,
-            self.progress,
-            {
-                "words": self.final_words,
-                "logp": self.final_logp,
-                "acc": self.accept_count,
-            },
-            extra={"fingerprint": self.plan.fingerprint(self.engine)},
+        fingerprint = self.plan.fingerprint(self.engine)
+        with telemetry.span("checkpoint.handle_save", step=self.progress):
+            path = save_checkpoint(
+                directory,
+                self.progress,
+                {
+                    "words": self.final_words,
+                    "logp": self.final_logp,
+                    "acc": self.accept_count,
+                },
+                extra={"fingerprint": fingerprint},
+            )
+        telemetry.log(
+            "run_handle.save",
+            fingerprint=fingerprint_digest(fingerprint),
+            step=self.progress,
+            n_steps=int(self.plan.n_steps),
+            path=path,
         )
+        return path
 
 
 # --- the one-dispatch compiled entry ---------------------------------------
@@ -297,6 +332,34 @@ def _submit_compiled_logp(
     )
 
 
+def _jit_cache_size(fn) -> int | None:
+    """Trace-cache entry count of a jitted callable (None when the jax
+    version hides it) — how the submit span tells a compile apart from a
+    cached re-dispatch."""
+    try:
+        return fn._cache_size()
+    except Exception:  # pragma: no cover - older/newer jax internals
+        return None
+
+
+def _submit_span(engine: MHEngine, plan: RunPlan, compiled: bool):
+    """The ``engine.submit`` telemetry span (DESIGN.md §Telemetry).
+    Host-side calls only — inside a jax trace the span would time trace
+    construction, not a dispatch, so traced re-entries skip it."""
+    cfg = engine.config
+    return telemetry.span(
+        "engine.submit",
+        update=cfg.update,
+        randomness=cfg.randomness,
+        execution=cfg.execution,
+        n_steps=int(plan.n_steps),
+        step0=int(plan.step0) if _is_concrete_int(plan.step0) else None,
+        collect=plan.collect if plan.collect is not None else cfg.collect,
+        num_chains=cfg.num_chains,
+        compiled=compiled,
+    )
+
+
 def submit(engine: MHEngine, plan: RunPlan, *, compiled: bool = False):
     """Run ``plan`` on ``engine``; the function behind ``MHEngine.submit``.
 
@@ -306,6 +369,15 @@ def submit(engine: MHEngine, plan: RunPlan, *, compiled: bool = False):
     statics would otherwise recompile per segment, which is exactly the
     trap the serving tier's traced-offset program avoids — so traced
     offsets always take the direct (still traceable) path.
+
+    Telemetry (DESIGN.md §Telemetry): every *host-side* submit runs
+    under an ``engine.submit`` span; on the compiled path the span's
+    ``jit_cache`` metadata records whether this dispatch compiled
+    (``"miss"``) or reused a trace (``"hit"``) — the compile-vs-execute
+    split the bench harness aggregates.  Instrumentation is wall-clock
+    bookkeeping around the unchanged dispatch calls, so the sampled
+    stream is bit-identical with telemetry on or off
+    (tests/test_telemetry.py).
     """
     if not isinstance(plan, RunPlan):
         raise TypeError(
@@ -314,6 +386,8 @@ def submit(engine: MHEngine, plan: RunPlan, *, compiled: bool = False):
             "seed=...)"
         )
     key = plan.resolved_key()
+    traced = telemetry.enabled() and _host_side()
+    span = _submit_span(engine, plan, compiled) if traced else None
     if compiled and _is_concrete_int(plan.step0):
         kw = dict(
             engine=engine,
@@ -324,22 +398,35 @@ def submit(engine: MHEngine, plan: RunPlan, *, compiled: bool = False):
             collect=plan.collect,
             mesh=plan.mesh,
         )
-        if plan.init_logp is None:
-            result = _submit_compiled(key, plan.init_words, **kw)
+        dispatcher = (
+            _submit_compiled if plan.init_logp is None
+            else _submit_compiled_logp
+        )
+        args = (
+            (key, plan.init_words) if plan.init_logp is None
+            else (key, plan.init_words, plan.init_logp)
+        )
+        if span is None:
+            result = dispatcher(*args, **kw)
         else:
-            result = _submit_compiled_logp(
-                key, plan.init_words, plan.init_logp, **kw
-            )
+            with span as sp:
+                before = _jit_cache_size(dispatcher)
+                result = dispatcher(*args, **kw)
+                after = _jit_cache_size(dispatcher)
+                if before is not None and after is not None:
+                    sp.set(jit_cache="miss" if after > before else "hit")
     else:
-        result = engine.run(
-            key,
-            plan.target,
-            plan.n_steps,
-            plan.init_words,
+        run_args = (key, plan.target, plan.n_steps, plan.init_words)
+        run_kw = dict(
             chain_id=plan.chain_id,
             mesh=plan.mesh,
             step0=plan.step0,
             collect=plan.collect,
             init_logp=plan.init_logp,
         )
+        if span is None:
+            result = engine.run(*run_args, **run_kw)
+        else:
+            with span:
+                result = engine.run(*run_args, **run_kw)
     return RunHandle(plan=plan, result=result, engine=engine)

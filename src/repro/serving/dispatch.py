@@ -27,6 +27,7 @@ from functools import partial
 
 import jax
 
+from repro import telemetry
 from repro.samplers import RunPlan
 
 
@@ -116,7 +117,13 @@ class SegmentPipeline:
     def push(self, thunk) -> None:
         self._pending.append(thunk)
         while len(self._pending) > self.depth:
-            self._pending.popleft()()
+            # backpressure: the host is now > depth segments behind and
+            # must block on the oldest segment's device values — the
+            # span duration is the donation stall the pipeline absorbed
+            with telemetry.span(
+                "serving.pipeline_stall", pending=len(self._pending)
+            ):
+                self._pending.popleft()()
 
     def drain(self) -> None:
         while self._pending:

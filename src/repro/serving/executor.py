@@ -36,7 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import workloads
+from repro import telemetry, workloads
 from repro.samplers.engine import parse_collect, resolve_execution
 from repro.samplers.plan import RunPlan
 from repro.serving.dispatch import SegmentPipeline, make_advance_fn
@@ -228,10 +228,20 @@ class PackedExecutor:
         # the segment never overshoots the shortest remaining budget, so
         # every retirement lands exactly on a chunk boundary
         seg = min(self.chunk_steps, *(self._slots[i].remaining for i in active))
-        if self.execution == "scan":
-            retired = self._advance_scan(active, seg)
-        else:
-            retired = self._advance_pallas(active, seg)
+        with telemetry.span(
+            "serving.segment",
+            seg=seg, active=len(active), execution=self.execution,
+        ):
+            if self.execution == "scan":
+                retired = self._advance_scan(active, seg)
+            else:
+                retired = self._advance_pallas(active, seg)
+        telemetry.counter(
+            "serving_segments_total", "packed segments dispatched"
+        ).inc(execution=self.execution)
+        telemetry.counter(
+            "serving_slot_steps_total", "slot-steps advanced"
+        ).inc(seg * len(active))
         finished = []
         if retired:
             batch = []
@@ -242,7 +252,7 @@ class PackedExecutor:
                 batch.append(s)
                 finished.append(s.req)
             self.pipeline.push(
-                lambda fs=batch: [self._finalize(s) for s in fs]
+                lambda fs=batch: self._finalize_batch(fs)
             )
         return finished
 
@@ -322,6 +332,30 @@ class PackedExecutor:
         return retired
 
     # -- retirement -----------------------------------------------------
+    def _finalize_batch(self, batch: list) -> None:
+        """Finalize a batch of retired slots under one span — the span
+        duration IS the donation/materialisation stall the pipeline
+        deferred (host blocks on device values here)."""
+        with telemetry.span("serving.finalize", retired=len(batch)):
+            for s in batch:
+                self._finalize(s)
+        telemetry.counter(
+            "serving_requests_retired_total", "requests finalized"
+        ).inc(len(batch))
+        for s in batch:
+            req = s.req
+            wl = getattr(req, "workload", "?")
+            wait = getattr(req, "wait_s", None)
+            if wait is not None:
+                telemetry.histogram(
+                    "serving_wait_seconds", "arrival -> admission"
+                ).observe(wait, workload=wl)
+            service = getattr(req, "service_s", None)
+            if service is not None:
+                telemetry.histogram(
+                    "serving_service_seconds", "admission -> materialised"
+                ).observe(service, workload=wl)
+
     def _finalize(self, s: _Slot) -> None:
         """Host-side retirement: materialise the request's payload and
         stamp delivery time.  Runs deferred through the dispatch

@@ -30,6 +30,7 @@ from collections import deque
 
 import numpy as np
 
+from repro import telemetry
 from repro.samplers.engine import parse_collect
 from repro.serving.executor import PackedExecutor
 
@@ -73,6 +74,13 @@ class ServeRequest:
     def wait_s(self) -> float | None:
         """Queue wait: arrival -> slot admission."""
         return None if self.t_admit is None else self.t_admit - self.t_arrive
+
+    @property
+    def service_s(self) -> float | None:
+        """In-slot time: admission -> result materialised on the host."""
+        if self.t_done is None or self.t_admit is None:
+            return None
+        return self.t_done - self.t_admit
 
     @property
     def latency_s(self) -> float | None:
@@ -152,6 +160,9 @@ class Scheduler:
         self.executors: dict[str, PackedExecutor] = {}
         self.done: list[ServeRequest] = []
         self._t0: float | None = None
+        # optional telemetry.JsonlFlusher — the serve loop calls
+        # maybe_flush() between chunks (rate-limited, host-side only)
+        self.metrics_flusher = None
 
     # -- clock: one timebase for every stamp ---------------------------
     def clock(self) -> float:
@@ -201,6 +212,9 @@ class Scheduler:
                 self.pending.push_front(req, req.t_arrive)
                 break
             ex.admit(req)
+            telemetry.counter(
+                "serving_requests_admitted_total", "requests admitted"
+            ).inc(workload=req.workload)
             admitted += 1
         return admitted
 
@@ -233,6 +247,14 @@ class Scheduler:
             self.submit(r)
         while self.pending or self.active:
             self.admit_ready(self.clock())
+            telemetry.gauge(
+                "serving_queue_depth", "pending requests"
+            ).set(len(self.pending))
+            telemetry.gauge(
+                "serving_active_slots", "occupied slots"
+            ).set(self.active)
+            if self.metrics_flusher is not None:
+                self.metrics_flusher.maybe_flush()
             if self.active:
                 self.step()
                 continue
@@ -251,12 +273,19 @@ class Scheduler:
 
 def latency_summary(requests) -> dict:
     """Throughput + latency percentiles over finished requests — the
-    row shape ``bench_serving`` and ``serve_engine`` both report."""
+    row shape ``bench_serving`` and ``serve_engine`` both report.
+
+    Latency decomposes as wait (arrival -> admission, the queueing cost
+    the *scheduler* controls) + service (admission -> host-materialised
+    result, the cost the *executor* controls); the split is reported so
+    an SLO breach points at the right layer.
+    """
     done = [r for r in requests if r.t_done is not None]
     if not done:
         return {"n_requests": 0}
     lat = np.asarray([r.latency_s for r in done], np.float64)
     wait = np.asarray([r.wait_s for r in done], np.float64)
+    service = np.asarray([r.service_s for r in done], np.float64)
     span = max(
         max(r.t_done for r in done) - min(r.t_arrive for r in done), 1e-9
     )
@@ -266,4 +295,8 @@ def latency_summary(requests) -> dict:
         "p50_latency_s": round(float(np.percentile(lat, 50)), 4),
         "p99_latency_s": round(float(np.percentile(lat, 99)), 4),
         "mean_wait_s": round(float(wait.mean()), 4),
+        "p99_wait_s": round(float(np.percentile(wait, 99)), 4),
+        "mean_service_s": round(float(service.mean()), 4),
+        "p50_service_s": round(float(np.percentile(service, 50)), 4),
+        "p99_service_s": round(float(np.percentile(service, 99)), 4),
     }

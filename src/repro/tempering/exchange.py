@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.diagnostics import SwapStats
 from repro.samplers import MHEngine, RunPlan, chain_key, parse_collect
 from repro.samplers.engine import resolve_execution
@@ -152,31 +153,43 @@ class ReplicaExchange:
         step = 0
         while step < n_steps:
             seg = min(self.swap_every, n_steps - step)
-            for r in range(num_replicas):
-                if scan_exec:
-                    res = _scan_segment(
-                        key, states[r], jnp.int32(step), engine=engine,
-                        target=targets[r], n_steps=seg,
-                        chain_id=chain_id + r,
-                    )
-                else:  # pallas: static step0; kernel traces cache on
-                    # (target, parity), not the offset, so eager is fine
-                    res = engine.submit(
-                        RunPlan(
+            with telemetry.span(
+                "tempering.segment",
+                step0=step, seg=seg, replicas=num_replicas,
+            ):
+                for r in range(num_replicas):
+                    if scan_exec:
+                        res = _scan_segment(
+                            key, states[r], jnp.int32(step), engine=engine,
                             target=targets[r], n_steps=seg,
-                            init_words=states[r], key=key,
-                            chain_id=chain_id + r, step0=step,
+                            chain_id=chain_id + r,
                         )
-                    ).result
-                states[r] = res.final_words
-                pieces[r].append(res.samples)
-                acc[r] = (
-                    res.accept_count if acc[r] is None
-                    else acc[r] + res.accept_count
-                )
+                    else:  # pallas: static step0; kernel traces cache on
+                        # (target, parity), not the offset, so eager is fine
+                        res = engine.submit(
+                            RunPlan(
+                                target=targets[r], n_steps=seg,
+                                init_words=states[r], key=key,
+                                chain_id=chain_id + r, step0=step,
+                            )
+                        ).result
+                    states[r] = res.final_words
+                    pieces[r].append(res.samples)
+                    acc[r] = (
+                        res.accept_count if acc[r] is None
+                        else acc[r] + res.accept_count
+                    )
             step += seg
             if step < n_steps and num_replicas > 1:
-                states = self._swap(key, target, states, step, stats)
+                with telemetry.span(
+                    "tempering.swap",
+                    abs_step=step,
+                    parity=(step // self.swap_every - 1) % 2,
+                ):
+                    states = self._swap(key, target, states, step, stats)
+                telemetry.counter(
+                    "tempering_swap_rounds_total", "swap sweeps run"
+                ).inc()
 
         samples = jnp.stack(
             [p[0] if len(p) == 1 else jnp.concatenate(p, 0) for p in pieces]
