@@ -182,6 +182,68 @@ def bench_case(
     return row
 
 
+def _assembly_case(
+    n_chunks: int, chunk: int, n_sites: int, assembly: str,
+    repeats: int = 3,
+) -> dict:
+    """The pallas chunk-buffer assembly micro-bench: the before/after
+    pair for ``_drive_pallas_chunks``'s eager collect="all" path.
+
+    ``pieces_concat`` is the historical strategy (append every chunk's
+    rows to a python list, one full-stream ``concatenate`` copy at the
+    end — O(kept) extra traffic); ``jit_donated`` is the current one
+    (preallocate the kept buffer once, write each chunk through the
+    donating jitted ``_chunk_writer`` so XLA reuses the buffer in
+    place).  Same chunk outputs, same result, only the assembly differs.
+    """
+    from repro.samplers.engine import _chunk_writer
+
+    chunks = [
+        jax.block_until_ready(
+            jnp.full((chunk, n_sites), i, jnp.uint32)
+        )
+        for i in range(n_chunks)
+    ]
+
+    if assembly == "pieces_concat":
+        def assemble():
+            pieces = []
+            for rows in chunks:
+                pieces.append(rows)
+            return jnp.concatenate(pieces, axis=0)
+    else:
+        write = _chunk_writer(1)
+
+        def assemble():
+            out = jnp.zeros((n_chunks * chunk, n_sites), jnp.uint32)
+            pos = 0
+            for rows in chunks:
+                out = write(out, rows, pos)
+                pos += chunk
+            return out
+
+    jax.block_until_ready(assemble())  # warm-up (compiles the writer)
+    wall_s = float("inf")
+    for _ in range(max(1, repeats)):
+        t0 = time.time()
+        jax.block_until_ready(assemble())
+        wall_s = min(wall_s, time.time() - t0)
+
+    n_steps = n_chunks * chunk
+    return {
+        "bench": "collection_assembly",
+        "assembly": assembly,
+        "collect": "all",
+        "n_steps": n_steps,
+        "chunk_steps": chunk,
+        "n_sites": n_sites,
+        "wall_s": round(wall_s, 4),
+        "steps_per_s": round(n_steps / max(wall_s, 1e-9), 1),
+        "site_steps_per_s": round(n_steps * n_sites / max(wall_s, 1e-9), 1),
+        "calib_steps_per_s": round(machine_calibration(), 1),
+    }
+
+
 def presets(smoke: bool = False):
     """(update, randomness, n_steps, chunk, setup) cases.
 
@@ -219,4 +281,12 @@ def run(smoke: bool = False) -> list[dict]:
                     target, init, repeats=5 if smoke else 2,
                 )
             )
+    n_chunks, chunk, n_sites = (12, 64, 256) if smoke else (64, 128, 4096)
+    for assembly in ("pieces_concat", "jit_donated"):
+        rows.append(
+            _assembly_case(
+                n_chunks, chunk, n_sites, assembly,
+                repeats=5 if smoke else 3,
+            )
+        )
     return rows

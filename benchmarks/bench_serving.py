@@ -9,6 +9,15 @@ requests (so the FIFO overflow path and slot reuse are exercised) on the
 GMM posterior workload under scan execution, after a warm-up burst that
 pays the compile.
 
+``_mixed_cell`` is the shape-class packing benchmark: a mixed ising+gmm
+burst (round-robin) through one scheduler, under scan (ONE class
+program with per-slot ``lax.switch`` dispatch) and pallas (one batched
+fused-kernel grid per workload geometry — the per-slot solo-submit
+fallback this replaced compiled and ran one program per slot per
+segment).  The row reports ``shape_classes`` and ``compiled_programs``
+alongside throughput, the compiled-programs-per-burst number the
+regression gate tracks.
+
 Row semantics: ``site_steps_per_s`` is total chain work / wall (the
 regression gate's normalised throughput field, comparable with the
 workloads table); ``requests_per_s`` and the latency percentiles come
@@ -17,12 +26,14 @@ from ``repro.serving.latency_summary`` over the measured burst only.
 
 from __future__ import annotations
 
+import math
 import time
 
 from benchmarks.bench_workloads import machine_calibration
 from repro.serving import Scheduler, ServeRequest, latency_summary
 
 WORKLOAD = "gmm"  # MH + table target: every randomness backend applies
+MIXED = ("gmm", "ising")  # round-robin mixed burst (even rid=gmm, odd=ising)
 
 
 def _serve_cell(
@@ -53,10 +64,8 @@ def _serve_cell(
     sched.serve(reqs)
     wall_s = time.perf_counter() - t0
 
-    ex = sched.executors[WORKLOAD]
-    n_sites = 1
-    for d in ex.state_shape:
-        n_sites *= d
+    ex = sched.executor_for(WORKLOAD)
+    n_sites = math.prod(ex.state_shape)
     site_steps = n_requests * n_steps * n_sites
     return {
         "workload": WORKLOAD,
@@ -78,6 +87,72 @@ def _serve_cell(
     }
 
 
+def _mixed_cell(
+    slots: int, randomness: str, execution: str, n_steps: int, smoke: bool
+) -> dict:
+    """A mixed ising+gmm burst through one scheduler: the shape-class
+    packing cell.  ``compiled_programs`` counts compiled packed advance
+    programs over warm-up + measurement (jit-cache growth) — one per
+    shape class is the packing claim.
+
+    The cell always runs the smoke workload shapes: it measures the
+    *packing* cost (programs compiled, per-segment dispatch) at a given
+    slot count, which the chain size only dilutes — the full-size chain
+    throughput story lives in the homogeneous cells above.
+    """
+    del smoke  # the packing cell is shape-pinned (see docstring)
+    smoke = True
+    n_requests = 2 * slots
+
+    def burst(rid0, seed0, t_arrive=0.0):
+        return [
+            ServeRequest(
+                rid=rid0 + i, workload=MIXED[i % len(MIXED)],
+                n_steps=n_steps, seed=seed0 + i, t_arrive=t_arrive,
+            )
+            for i in range(n_requests)
+        ]
+
+    sched = Scheduler(
+        n_slots=slots, randomness=randomness, execution=execution,
+        smoke=smoke, chunk_steps=16,
+    )
+    sched.serve(burst(-n_requests, 1000))  # warm-up pays the compiles
+
+    now = sched.clock()
+    reqs = burst(0, 0, t_arrive=now)
+    t0 = time.perf_counter()
+    sched.serve(reqs)
+    wall_s = time.perf_counter() - t0
+
+    site_steps = sum(
+        n_steps * math.prod(sched.executor_for(r.workload).member_for(
+            r.workload).state_shape)
+        for r in reqs
+    )
+    return {
+        "workload": "+".join(MIXED),
+        "update": "mixed",
+        "slots": slots,
+        "randomness": randomness,
+        "backend": execution,
+        "n_requests": n_requests,
+        "n_steps": n_steps,
+        "collect": "last",
+        "workload_groups": len(MIXED),
+        "shape_classes": sched.shape_classes,
+        "compiled_programs": sched.compiled_programs,
+        "wall_s": round(wall_s, 3),
+        "site_steps_per_s": round(site_steps / max(wall_s, 1e-9), 1),
+        "calib_steps_per_s": round(machine_calibration(), 1),
+        **{
+            k: v
+            for k, v in latency_summary(reqs).items()
+            if k != "n_requests"
+        },
+    }
+
+
 def presets(smoke: bool = False):
     """(slots, randomness) grid; smoke trims the pool sizes for CI."""
     slot_sizes = (1, 4) if smoke else (1, 4, 16)
@@ -85,12 +160,24 @@ def presets(smoke: bool = False):
     return [(s, r) for s in slot_sizes for r in backends]
 
 
+def mixed_presets(smoke: bool = False):
+    """(slots, randomness, execution) for the mixed-burst packing cells:
+    scan (one class program) vs pallas (one kernel grid per geometry)."""
+    slots = 4 if smoke else 16
+    return [(slots, "fused", "scan"), (slots, "fused", "pallas")]
+
+
 def run(smoke: bool = False) -> list[dict]:
     n_steps = 64 if smoke else 512
-    return [
+    rows = [
         _serve_cell(slots, randomness, n_steps, smoke)
         for slots, randomness in presets(smoke)
     ]
+    rows += [
+        _mixed_cell(slots, randomness, execution, 64, smoke)
+        for slots, randomness, execution in mixed_presets(smoke)
+    ]
+    return rows
 
 
 if __name__ == "__main__":

@@ -71,6 +71,12 @@ MEASURED_FIELDS = frozenset({
     "p50_latency_s",
     "p99_latency_s",
     "mean_wait_s",
+    # shape-class packing (mixed-burst cells): compiled packed advance
+    # programs per burst and the class count are measured outputs — the
+    # packing claim is one program per class, not per slot or workload
+    "compiled_programs",
+    "shape_classes",
+    "workload_groups",
     # wait-vs-service decomposition (serving/scheduler.latency_summary)
     "p99_wait_s",
     "mean_service_s",

@@ -37,16 +37,17 @@ from repro.kernels import rng
 def _gibbs_kernel(
     init_ref,     # (1, H, W) uint32 {0,1} spins
     u_ref,        # (K, 1, H, W) float32
+    parity_ref,   # (1, 1) int32 this lattice's starting parity
     *rest,        # n_consts broadcast model refs, then the two outputs:
                   #   samples (K, 1, H, W) uint32, flips (1, H, W) int32
     logit_fn,
     n_steps: int,
-    parity0: int,
     n_consts: int,
 ):
     const_refs, (samples_ref, flips_ref) = rest[:n_consts], rest[n_consts:]
     consts = tuple(ref[...] for ref in const_refs)
     state0 = init_ref[0]
+    parity0 = parity_ref[0, 0]
     h, w = state0.shape
     row = jax.lax.broadcasted_iota(jnp.int32, (h, w), 0)
     col = jax.lax.broadcasted_iota(jnp.int32, (h, w), 1)
@@ -69,13 +70,13 @@ def _gibbs_kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("logit_fn", "parity0", "interpret")
+    jax.jit, static_argnames=("logit_fn", "interpret")
 )
 def gibbs_chain_pallas(
     init: jnp.ndarray,  # (B, H, W) uint32 {0,1} spins
     u: jnp.ndarray,     # (K, B, H, W) float32
     logit_fn,           # (H, W) state [, *consts] -> (H, W) logit of s=1
-    parity0: int = 0,
+    parity0=0,          # int or (B,) int32 starting checkerboard parity
     interpret: bool = True,
     consts: tuple = (),
 ):
@@ -88,6 +89,10 @@ def gibbs_chain_pallas(
     ``consts`` operands instead, broadcast to every grid step, and
     ``logit_fn(state, *consts)`` threads them back into the one shared
     conditional implementation (DESIGN.md §Tempering).
+
+    ``parity0`` is a runtime operand (scalar or per-lattice ``(B,)``),
+    so lattices at different absolute steps — packed serving slots —
+    share one compiled program.
     """
     b, h, w = init.shape
     k_steps = u.shape[0]
@@ -95,11 +100,11 @@ def gibbs_chain_pallas(
         raise ValueError(
             f"shape mismatch: init={init.shape} u={u.shape}"
         )
+    parity0b = jnp.broadcast_to(jnp.asarray(parity0, jnp.int32), (b,))
     kernel = functools.partial(
         _gibbs_kernel,
         logit_fn=logit_fn,
         n_steps=k_steps,
-        parity0=parity0,
         n_consts=len(consts),
     )
     const_specs = [
@@ -112,6 +117,7 @@ def gibbs_chain_pallas(
         in_specs=[
             pl.BlockSpec((1, h, w), lambda i: (i, 0, 0)),
             pl.BlockSpec((k_steps, 1, h, w), lambda i: (0, i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
             *const_specs,
         ],
         out_specs=[
@@ -123,7 +129,7 @@ def gibbs_chain_pallas(
             jax.ShapeDtypeStruct((b, h, w), jnp.int32),
         ],
         interpret=interpret,
-    )(init.astype(jnp.uint32), u, *consts)
+    )(init.astype(jnp.uint32), u, parity0b.reshape(b, 1), *consts)
     return samples, flips
 
 
@@ -131,11 +137,11 @@ def _gibbs_fused_kernel(
     init_ref,     # (1, H, W) uint32 {0,1} spins
     k0_ref,       # (1, 1) uint32 this lattice's chain-key word 0
     k1_ref,       # (1, 1) uint32 this lattice's chain-key word 1
+    t0_ref,       # (1, 1) int32 this lattice's absolute-step base
     *rest,        # n_consts broadcast model refs, then the two outputs:
                   #   samples (K, 1, H, W) uint32, flips (1, H, W) int32
     logit_fn,
     n_steps: int,
-    t0: int,
     lat_b: int,
     n_consts: int,
 ):
@@ -146,13 +152,18 @@ def _gibbs_fused_kernel(
     draws the scan-side ``FusedRandomness`` reference makes.  ``lat_b``
     is the per-chain lattice-batch size (chains fold into the batch
     grid axis, DESIGN.md §Chains-axis), so lattice ``i`` covers sites
-    ``(i % lat_b) * H * W + h * W + w``.  The checkerboard parity is
-    the absolute step mod 2, inherited from ``t0``."""
+    ``(i % lat_b) * H * W + h * W + w``.  The absolute-step base ``t0``
+    is a per-lattice *operand* — lattices at different stream offsets
+    (packed serving slots, successive chunks) share one compiled
+    program, and both the counter and the checkerboard parity
+    (absolute step mod 2) derive from it in-kernel, so the stream is
+    unchanged by construction."""
     const_refs, (samples_ref, flips_ref) = rest[:n_consts], rest[n_consts:]
     consts = tuple(ref[...] for ref in const_refs)
     state0 = init_ref[0]
     k0 = k0_ref[0, 0]
     k1 = k1_ref[0, 0]
+    t0 = t0_ref[0, 0].astype(jnp.uint32)
     h, w = state0.shape
     row = jax.lax.broadcasted_iota(jnp.int32, (h, w), 0)
     col = jax.lax.broadcasted_iota(jnp.int32, (h, w), 1)
@@ -162,7 +173,7 @@ def _gibbs_fused_kernel(
 
     def body(k, carry):
         state, nflips = carry
-        t = jnp.uint32(t0) + k.astype(jnp.uint32)
+        t = t0 + k.astype(jnp.uint32)
         parity = (t % 2).astype(jnp.int32)
         s0, s1 = rng.step_key(k0, k1, t)
         u = rng.uniform_at(s0, s1, site)
@@ -181,37 +192,37 @@ def _gibbs_fused_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("logit_fn", "n_steps", "t0", "lat_b", "interpret"),
+    static_argnames=("logit_fn", "n_steps", "lat_b", "interpret"),
 )
 def gibbs_chain_pallas_fused(
     init: jnp.ndarray,  # (B, H, W) uint32 {0,1} spins
     k0b: jnp.ndarray,   # (B,) uint32 per-lattice chain-key word 0
     k1b: jnp.ndarray,   # (B,) uint32 per-lattice chain-key word 1
+    t0b: jnp.ndarray,   # (B,) int32 per-lattice absolute-step base
     logit_fn,           # (H, W) state [, *consts] -> (H, W) logit of s=1
     *,
     n_steps: int,
-    t0: int,
     lat_b: int,
     interpret: bool = True,
     consts: tuple = (),
 ):
     """Fused K-half-sweep Gibbs with in-kernel RNG: zero per-step
-    randomness operands — only the per-lattice key words (8
-    bytes/lattice/chunk) cross the kernel boundary.  ``t0`` is the
-    absolute step of the first half-sweep (parity = t0 % 2); ``lat_b``
-    the per-chain lattice-batch size.  Same ``logit_fn``/``consts``
+    randomness operands — only the per-lattice key words + step base
+    (12 bytes/lattice/chunk) cross the kernel boundary.  ``t0b`` is the
+    absolute step of the first half-sweep per lattice (parity =
+    t0 % 2), a *runtime operand* so lattices at different stream
+    offsets share one compiled program.  Same ``logit_fn``/``consts``
     contract as ``gibbs_chain_pallas``."""
     b, h, w = init.shape
-    if k0b.shape != (b,) or k1b.shape != (b,):
+    if k0b.shape != (b,) or k1b.shape != (b,) or t0b.shape != (b,):
         raise ValueError(
-            f"per-lattice key words must be ({b},), got "
-            f"{k0b.shape}/{k1b.shape}"
+            f"per-lattice key/step words must be ({b},), got "
+            f"{k0b.shape}/{k1b.shape}/{t0b.shape}"
         )
     kernel = functools.partial(
         _gibbs_fused_kernel,
         logit_fn=logit_fn,
         n_steps=n_steps,
-        t0=t0,
         lat_b=lat_b,
         n_consts=len(consts),
     )
@@ -224,6 +235,7 @@ def gibbs_chain_pallas_fused(
         grid=(b,),
         in_specs=[
             pl.BlockSpec((1, h, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
             pl.BlockSpec((1, 1), lambda i: (i, 0)),
             pl.BlockSpec((1, 1), lambda i: (i, 0)),
             *const_specs,
@@ -241,6 +253,7 @@ def gibbs_chain_pallas_fused(
         init.astype(jnp.uint32),
         k0b.reshape(b, 1),
         k1b.reshape(b, 1),
+        t0b.astype(jnp.int32).reshape(b, 1),
         *consts,
     )
     return samples, flips

@@ -11,6 +11,7 @@ mode (CPU) takes any lattice shape.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.gibbs.gibbs import (
     gibbs_chain_pallas,
@@ -22,7 +23,7 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def gibbs_sweep(init, u, logit_fn, parity0: int = 0, consts: tuple = ()):
+def gibbs_sweep(init, u, logit_fn, parity0=0, consts: tuple = ()):
     """Run K fused checkerboard half-sweeps from ``init`` (B, H, W).
 
     ``logit_fn`` is the model's per-site conditional logit (e.g.
@@ -41,19 +42,25 @@ def gibbs_sweep(init, u, logit_fn, parity0: int = 0, consts: tuple = ()):
     (same u stream, no pseudo-read planes) and its shared chunk
     scheduler keeps/drops the returned samples per its collection mode
     (DESIGN.md §Collection) — this wrapper always emits the full chunk.
+
+    ``parity0`` may be a python int or a per-lattice ``(B,)`` array —
+    it is a runtime operand of the kernel, so heterogeneous-offset
+    lattices (packed serving slots) share one compiled program.
     """
+    b = init.shape[0]
+    parity0b = jnp.broadcast_to(jnp.asarray(parity0, jnp.int32), (b,))
     return gibbs_chain_pallas(
         init,
         u,
         logit_fn,
-        parity0=int(parity0),
+        parity0=parity0b,
         interpret=not _on_tpu(),
         consts=tuple(consts),
     )
 
 
 def gibbs_sweep_fused(
-    init, k0b, k1b, logit_fn, *, n_steps: int, t0: int, lat_b: int,
+    init, k0b, k1b, logit_fn, *, n_steps: int, t0, lat_b: int,
     consts: tuple = (),
 ):
     """In-kernel-RNG edition of ``gibbs_sweep`` (randomness="fused"): no
@@ -61,16 +68,19 @@ def gibbs_sweep_fused(
     chain-key words (8 bytes per lattice per chunk, vs 4 bytes per site
     per *step* shipped under host/cim) and the kernel derives every
     half-sweep's site uniforms from the ``(t0 + k, site)`` counter
-    (DESIGN.md §Randomness).  ``t0`` is the absolute step of the first
+    (DESIGN.md §Randomness).  ``t0`` — an int or per-lattice ``(B,)``
+    array, a runtime operand — is the absolute step of the first
     half-sweep (it carries the checkerboard parity); ``lat_b`` the
     per-chain lattice-batch size (solo callers pass init.shape[0])."""
+    b = init.shape[0]
+    t0b = jnp.broadcast_to(jnp.asarray(t0, jnp.int32), (b,))
     return gibbs_chain_pallas_fused(
         init,
         k0b,
         k1b,
+        t0b,
         logit_fn,
         n_steps=int(n_steps),
-        t0=int(t0),
         lat_b=int(lat_b),
         interpret=not _on_tpu(),
         consts=tuple(consts),

@@ -127,12 +127,12 @@ def _mh_fused_kernel(
     init_ref,     # (1, BC) uint32
     k0_ref,       # (1, BC) uint32 per-column chain-key word 0
     k1_ref,       # (1, BC) uint32 per-column chain-key word 1
+    t0_ref,       # (1, BC) int32 per-column absolute-step base
     samples_ref,  # (K, 1, BC) uint32  out
     accept_ref,   # (1, BC) int32      out
     *,
     nbits: int,
     n_steps: int,
-    t0: int,
     cc: int,
     p_u32: int,
 ):
@@ -142,6 +142,11 @@ def _mh_fused_kernel(
     ``t0 + k`` at site ``row * cc + col % cc`` with the shared counter
     cipher (kernels/rng) — the same functions the scan-side
     ``FusedRandomness`` reference draws through, so parity is by
+    construction.  The absolute-step base ``t0`` is a per-column
+    *operand* (not a compile-time constant): columns at different
+    stream offsets — the serving tier's packed slots, tempering
+    segments — share one compiled program, and the counter arithmetic
+    is identical either way, so the stream is unchanged by
     construction.  ``cc`` is the per-chain column count (chains fold
     chain-major into the compartment axis, DESIGN.md §Chains-axis)."""
     table = table_ref[0, :]
@@ -150,6 +155,7 @@ def _mh_fused_kernel(
     state0 = init_ref[0, :]
     k0 = k0_ref[0, :]
     k1 = k1_ref[0, :]
+    t0 = t0_ref[0, :].astype(jnp.uint32)
 
     block_c = state0.shape[0]
     i = pl.program_id(0)
@@ -167,7 +173,7 @@ def _mh_fused_kernel(
 
     def body(k, carry):
         state, logp, acc = carry
-        s0, s1 = rng.step_key(k0, k1, jnp.uint32(t0) + k.astype(jnp.uint32))
+        s0, s1 = rng.step_key(k0, k1, t0 + k.astype(jnp.uint32))
         flip = rng.flips_at(s0, s1, site, nbits, p_u32)
         u = rng.uniform_at(s0, s1, site)
         cand = jnp.bitwise_xor(state, flip & mask)
@@ -191,7 +197,7 @@ def _mh_fused_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "nbits", "n_steps", "t0", "cc", "p_u32", "block_c", "interpret"
+        "nbits", "n_steps", "cc", "p_u32", "block_c", "interpret"
     ),
 )
 def mh_chain_pallas_fused(
@@ -199,25 +205,28 @@ def mh_chain_pallas_fused(
     init: jnp.ndarray,    # (B, C) uint32
     k0c: jnp.ndarray,     # (C,) uint32 per-column chain-key word 0
     k1c: jnp.ndarray,     # (C,) uint32 per-column chain-key word 1
+    t0c: jnp.ndarray,     # (C,) int32 per-column absolute-step base
     *,
     nbits: int,
     n_steps: int,
-    t0: int,
     cc: int,
     p_u32: int,
     block_c: int = 256,
     interpret: bool = True,
 ):
     """Fused K-step MH with in-kernel RNG: zero per-step randomness
-    operands — only the per-column key words (8 bytes/column/chunk)
-    cross the kernel boundary.  ``t0`` is the absolute step of the first
-    chunk row; ``cc`` the per-chain column count.  C % block_c == 0."""
+    operands — only the per-column key words + step base (12
+    bytes/column/chunk) cross the kernel boundary.  ``t0c`` is the
+    absolute step of the first chunk row, per column, as a *runtime
+    operand* so chunks/slots at different stream offsets reuse one
+    compiled program; ``cc`` the per-chain column count.
+    C % block_c == 0."""
     b, vocab = table.shape
     c = init.shape[1]
-    if k0c.shape != (c,) or k1c.shape != (c,):
+    if k0c.shape != (c,) or k1c.shape != (c,) or t0c.shape != (c,):
         raise ValueError(
-            f"per-column key words must be ({c},), got "
-            f"{k0c.shape}/{k1c.shape}"
+            f"per-column key/step words must be ({c},), got "
+            f"{k0c.shape}/{k1c.shape}/{t0c.shape}"
         )
     block_c = min(block_c, c)
     if c % block_c != 0:
@@ -225,7 +234,7 @@ def mh_chain_pallas_fused(
 
     kernel = functools.partial(
         _mh_fused_kernel,
-        nbits=nbits, n_steps=n_steps, t0=t0, cc=cc, p_u32=p_u32,
+        nbits=nbits, n_steps=n_steps, cc=cc, p_u32=p_u32,
     )
     samples, accept = pl.pallas_call(
         kernel,
@@ -233,6 +242,7 @@ def mh_chain_pallas_fused(
         in_specs=[
             pl.BlockSpec((1, vocab), lambda i, j: (i, 0)),
             pl.BlockSpec((1, block_c), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_c), lambda i, j: (0, j)),
             pl.BlockSpec((1, block_c), lambda i, j: (0, j)),
             pl.BlockSpec((1, block_c), lambda i, j: (0, j)),
         ],
@@ -250,6 +260,7 @@ def mh_chain_pallas_fused(
         init.astype(jnp.uint32),
         k0c.reshape(1, c),
         k1c.reshape(1, c),
+        t0c.astype(jnp.int32).reshape(1, c),
     )
     return samples, accept
 

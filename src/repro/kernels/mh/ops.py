@@ -48,7 +48,7 @@ def mh_sample(table, init, flips, u, nbits: int, block_c: int = 256):
 
 
 def mh_sample_fused(
-    table, init, k0c, k1c, *, n_steps: int, t0: int, nbits: int,
+    table, init, k0c, k1c, *, n_steps: int, t0, nbits: int,
     p_bfr: float, cc: int, block_c: int = 256,
 ):
     """In-kernel-RNG edition of ``mh_sample`` (randomness="fused"): the
@@ -56,12 +56,15 @@ def mh_sample_fused(
     the per-column chain-key words (8 bytes per column per chunk, vs
     8 bytes per site per *step* for shipped operands) and the kernel
     derives each step's flip word + uniform from the ``(t0 + k, site)``
-    counter (DESIGN.md §Randomness).  ``cc`` is the per-chain column
-    count (the solo chain width; multi-chain callers fold chains
-    chain-major).  Padding columns carry zero keys; their chains evolve
-    under the zero-key stream and are sliced off like the operand
-    path's u=1.0 padding."""
+    counter (DESIGN.md §Randomness).  ``t0`` is an int or per-column
+    (C,) int32 array — a runtime operand, so columns at different
+    absolute steps (packed serving slots, successive chunks) share one
+    compiled program.  ``cc`` is the per-chain column count (the solo
+    chain width; multi-chain callers fold chains chain-major).  Padding
+    columns carry zero keys; their chains evolve under the zero-key
+    stream and are sliced off like the operand path's u=1.0 padding."""
     b, c = init.shape
+    t0c = jnp.broadcast_to(jnp.asarray(t0, jnp.int32), (c,))
     bc = min(block_c, _round_up(c, 128))
     c_pad = _round_up(c, bc)
     if c_pad != c:
@@ -69,8 +72,9 @@ def mh_sample_fused(
         init = jnp.pad(init, ((0, 0), (0, pad)))
         k0c = jnp.pad(k0c, (0, pad))
         k1c = jnp.pad(k1c, (0, pad))
+        t0c = jnp.pad(t0c, (0, pad))
     samples, accept = mh_chain_pallas_fused(
-        table, init, k0c, k1c, nbits=nbits, n_steps=n_steps, t0=t0, cc=cc,
+        table, init, k0c, k1c, t0c, nbits=nbits, n_steps=n_steps, cc=cc,
         p_u32=rng.threshold_u32(p_bfr), block_c=bc, interpret=not _on_tpu(),
     )
     return samples[:, :, :c], accept[:, :c]

@@ -14,12 +14,21 @@ synthetic Poisson arrival generator (``--poisson-rate`` arrivals/s,
 seeds 0..N-1).  Arrival gaps are fast-forwarded by default; pass
 ``--realtime`` to sleep through them.
 
+``--workload`` takes a comma-separated list for a mixed burst
+(round-robin assignment): under scan execution every uint32 workload
+shares ONE compiled shape-class program; under pallas each workload
+geometry gets one packed kernel grid over all its slots.  ``--mesh``
+shards the slot axis over all addressable devices (scan only).
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve_engine --smoke \
       --requests 6 --slots 3 --poisson-rate 50
   PYTHONPATH=src python -m repro.launch.serve_engine --smoke \
       --workload gmm --requests 8 --slots 4 --randomness fused \
       --collect thin:4
+  PYTHONPATH=src python -m repro.launch.serve_engine --smoke \
+      --workload ising,gmm --backend pallas --randomness fused \
+      --slots 4 --requests 6
   PYTHONPATH=src python -m repro.launch.serve_engine --spec requests.jsonl
 
 Per-request lines report wait/latency and the accept (MH) or flip
@@ -38,23 +47,45 @@ from repro import telemetry, workloads
 from repro.serving import Scheduler, ServeRequest, latency_summary
 
 
+def _workload_list(value: str) -> list[str]:
+    names = [w.strip() for w in value.split(",") if w.strip()]
+    if not names:
+        raise argparse.ArgumentTypeError("empty workload list")
+    for name in names:
+        if name not in workloads.WORKLOADS:
+            raise argparse.ArgumentTypeError(
+                f"unknown workload {name!r} (choices: "
+                f"{', '.join(sorted(workloads.WORKLOADS))})"
+            )
+    return names
+
+
 def build_parser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser(
         prog="repro.launch.serve_engine",
         description="Serve sampling requests packed into one engine program.",
     )
     p.add_argument(
-        "--workload", default="ising", choices=sorted(workloads.WORKLOADS),
-        help="workload for synthetic requests (JSONL specs name their own)",
+        "--workload", default=["ising"], type=_workload_list,
+        help="workload for synthetic requests, or a comma-separated list "
+        "(round-robin assignment) for a mixed burst; JSONL specs name "
+        "their own.  Choices: " + ", ".join(sorted(workloads.WORKLOADS)),
     )
     p.add_argument(
         "--randomness", default="cim", choices=("host", "cim", "fused")
     )
     p.add_argument(
         "--backend", default="scan", choices=("auto", "scan", "pallas"),
-        help="engine execution: scan packs all slots into one vmapped "
-        "program (traced step0); pallas runs one fused program per slot "
-        "(static step0)",
+        help="engine execution: scan packs every uint32 workload into ONE "
+        "vmapped shape-class program (per-slot lax.switch dispatch, "
+        "traced step0); pallas folds all slots into one batched "
+        "fused-kernel grid per workload geometry (per-slot operand step0)",
+    )
+    p.add_argument(
+        "--mesh", action="store_true",
+        help="shard the slot axis over all addressable devices through "
+        "the 'chains' sharding rule (scan backend only; no-op on a "
+        "single device)",
     )
     p.add_argument("--smoke", action="store_true", help="tiny sizes for CI")
     p.add_argument("--slots", type=int, default=4, help="packed slot pool")
@@ -146,13 +177,14 @@ def poisson_requests(args) -> list[ServeRequest]:
     rng = np.random.default_rng(args.seed)
     t = 0.0
     requests = []
+    names = args.workload
     for rid in range(args.requests):
         if args.poisson_rate > 0:
             t += float(rng.exponential(1.0 / args.poisson_rate))
         requests.append(
             ServeRequest(
                 rid=rid,
-                workload=args.workload,
+                workload=names[rid % len(names)],  # round-robin mixed burst
                 n_steps=args.steps,
                 seed=rid,
                 collect=args.collect,
@@ -178,7 +210,7 @@ def main(argv=None) -> dict:
         from repro import samplers
 
         wl = workloads.build(
-            args.workload, jax.random.PRNGKey(0),
+            args.workload[0], jax.random.PRNGKey(0),
             randomness=args.randomness, smoke=args.smoke,
         )
         cfg = wl.engine.config
@@ -197,12 +229,20 @@ def main(argv=None) -> dict:
         )
     if args.trace:
         telemetry.enable()
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_chains_mesh
+
+        mesh = make_chains_mesh()
+        if mesh is None:
+            print("[serve_engine] --mesh: single device, serving unsharded")
     sched = Scheduler(
         n_slots=args.slots,
         randomness=args.randomness,
         execution=args.backend,
         smoke=args.smoke,
         chunk_steps=chunk_steps,
+        mesh=mesh,
     )
     if args.metrics and not args.metrics.endswith((".prom", ".txt")):
         sched.metrics_flusher = telemetry.JsonlFlusher(
@@ -224,6 +264,8 @@ def main(argv=None) -> dict:
         "slots": args.slots,
         "randomness": args.randomness,
         "backend": args.backend,
+        "shape_classes": sched.shape_classes,
+        "compiled_programs": sched.compiled_programs,
         **summary,
     }
     print("[serve_engine] " + "  ".join(f"{k}={v}" for k, v in row.items()))
@@ -233,7 +275,7 @@ def main(argv=None) -> dict:
         ),
         warn=False,
     )
-    monitor.check_serving(summary, where=args.workload)
+    monitor.check_serving(summary, where=",".join(args.workload))
     for alert in monitor.alerts:
         print(f"[health] {alert.severity} {alert.kind}: {alert.message}")
     if args.trace:

@@ -49,6 +49,7 @@ step regardless of what is kept.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple
 
 import jax
@@ -320,21 +321,37 @@ def _run_scan(
     return samples, acc, words, logp
 
 
-def _concrete_step0(step0) -> int:
-    """Pallas executors chunk with a python loop and bake the Gibbs
-    checkerboard parity into the kernel as a static argument, so the
-    stream offset must be a concrete int (scan executors take traced
-    offsets)."""
+def _step0_base(step0):
+    """Best-effort concrete step0 for the pallas executors.  The chunk
+    *schedule* (the python loop) is always static, but the absolute-step
+    base is a runtime operand of the fused kernels (and of the
+    checkerboard-parity argument), so a traced ``step0`` is fine for
+    collect="all"/"last" — successive serving segments and packed slots
+    reuse one compiled program.  Only thinning still needs a concrete
+    offset (the kept-slice stride is resolved at python level), which
+    ``_parse_collect`` enforces with a actionable error upstream."""
     try:
         return int(step0)
-    except TypeError as e:
-        raise ValueError(
-            "pallas execution needs a concrete (python int) step0 — the "
-            "chunk schedule and checkerboard parity are compile-time "
-            "static; use execution='scan' for traced stream offsets, or "
-            "launch per-segment programs with concrete offsets like the "
-            "serving tier's pallas fallback (serving/executor.py)"
-        ) from e
+    except TypeError:
+        return step0
+
+
+@functools.lru_cache(maxsize=None)
+def _chunk_writer(ndim: int):
+    """Donating jitted chunk-buffer update for the eager pallas driver:
+    ``out[pos : pos + rows.shape[0]] = rows`` as one compiled program
+    whose output aliases the donated input, so each chunk write touches
+    only the written rows.  The historical eager assembly appended to a
+    ``pieces`` list and paid a full-stream ``concatenate`` copy at the
+    end (plus O(chunks) buffer lifetimes); a bare eager
+    ``dynamic_update_slice`` would be worse still — a whole-buffer copy
+    per chunk, O(K²/chunk) traffic.  ``pos`` is a traced operand, so one
+    compile serves every chunk boundary."""
+
+    def write(out, rows, pos):
+        return jax.lax.dynamic_update_slice(out, rows, (pos,) + (0,) * ndim)
+
+    return jax.jit(write, donate_argnums=(0,))
 
 
 def _drive_pallas_chunks(run_chunk, init_state, n_steps, chunk, step0, collect):
@@ -343,18 +360,19 @@ def _drive_pallas_chunks(run_chunk, init_state, n_steps, chunk, step0, collect):
 
     ``run_chunk(state, start, n)`` launches one fused-kernel program for
     relative steps [start, start + n) and returns (samples (n, *state
-    shape) uint32, per-site count (*state shape) int32).  Under a trace
-    (``run_engine`` or any caller-side jit — which also collapses the
-    loop into a single dispatch) kept rows are written straight into one
-    preallocated output buffer via ``lax.dynamic_update_slice``, which
-    XLA aliases in place, eliminating the historical per-chunk
-    ``pieces`` list + final ``concatenate`` copy.  Eagerly each
-    dynamic_update_slice would instead copy the whole buffer per chunk
-    (O(K²/chunk) traffic), so the eager path keeps the single-copy
-    pieces/concatenate assembly.  Under "last" samples are dropped at
-    the chunk boundary either way and only (state, count) survive.
-    ``step0``/``start`` are concrete here (``_concrete_step0``), so the
-    thin kept-slice per chunk is static.
+    shape) uint32, per-site count (*state shape) int32).  Kept rows are
+    written straight into one preallocated output buffer via
+    ``lax.dynamic_update_slice``: under a trace (``run_engine`` or any
+    caller-side jit — which also collapses the loop into a single
+    dispatch) XLA aliases the update in place, and eagerly the write
+    goes through the donating jitted ``_chunk_writer`` so the buffer is
+    reused in place as well — no per-chunk ``pieces`` list, no final
+    full-stream ``concatenate`` copy, O(rows-written) traffic per chunk
+    either way.  Under "last" samples are dropped at the chunk boundary
+    and only (state, count) survive.  The chunk *schedule* (the python
+    loop) is static; ``step0`` may be traced (``_step0_base``) except
+    under thinning, whose kept-slice arithmetic is python-level
+    (enforced upstream by ``_parse_collect``).
     """
     mode, k = collect
     chunk = _effective_chunk(n_steps, chunk, k if mode == "thin" else None)
@@ -367,18 +385,17 @@ def _drive_pallas_chunks(run_chunk, init_state, n_steps, chunk, step0, collect):
     else:
         n_keep = 0
     traced = isinstance(state, jax.core.Tracer)
-    out = jnp.zeros((n_keep, *state.shape), jnp.uint32) if traced else None
+    out = jnp.zeros((n_keep, *state.shape), jnp.uint32)
     zeros = (0,) * state.ndim
-    pieces = []
     pos = 0
 
     def emit(rows):
         nonlocal out, pos
         if traced:
             out = jax.lax.dynamic_update_slice(out, rows, (pos, *zeros))
-            pos += rows.shape[0]
         else:
-            pieces.append(rows)
+            out = _chunk_writer(state.ndim)(out, rows, pos)
+        pos += rows.shape[0]
 
     for start in range(0, n_steps, chunk):
         n = min(chunk, n_steps - start)
@@ -391,11 +408,6 @@ def _drive_pallas_chunks(run_chunk, init_state, n_steps, chunk, step0, collect):
             i0 = _thin_offset(step0 + start, k)
             if i0 < n:
                 emit(samples[i0::k])
-    if not traced:
-        if not pieces:
-            out = jnp.zeros((n_keep, *state.shape), jnp.uint32)
-        else:
-            out = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, 0)
     return out, acc, state
 
 
@@ -437,7 +449,7 @@ def _run_pallas(
         raise ValueError(
             f"pallas execution expects (B, C) chain state, got {init_words.shape}"
         )
-    step0 = _concrete_step0(step0)
+    step0 = _step0_base(step0)
 
     if backend.name == "fused":
         c = init_words.shape[1]
@@ -511,7 +523,7 @@ def _run_pallas_gibbs(
             f"pallas Gibbs expects (B, H, W) lattice state, got "
             f"{init_words.shape}"
         )
-    step0 = _concrete_step0(step0)
+    step0 = _step0_base(step0)
     logit_fn, consts = _fused_gibbs_logit(target)
 
     if backend.name == "fused":
@@ -570,7 +582,7 @@ def _run_pallas_chains(
             f"multi-chain pallas execution expects (num_chains, B, C) chain "
             f"state, got {init.shape}"
         )
-    step0 = _concrete_step0(step0)
+    step0 = _step0_base(step0)
     c_chains, b, cc = init.shape
     state0 = jnp.transpose(init.astype(jnp.uint32), (1, 0, 2)).reshape(
         b, c_chains * cc
@@ -631,7 +643,7 @@ def _run_pallas_gibbs_chains(
             f"multi-chain pallas Gibbs expects (num_chains, B, H, W) lattice "
             f"state, got {init.shape}"
         )
-    step0 = _concrete_step0(step0)
+    step0 = _step0_base(step0)
     logit_fn, consts = _fused_gibbs_logit(target)
     c_chains, b, h, w = init.shape
     state0 = init.astype(jnp.uint32).reshape(c_chains * b, h, w)
@@ -765,9 +777,12 @@ class MHEngine:
         so a run resumed from ``(final_words, step0=s)`` continues the
         exact stream of one unsegmented run — the segment-invariance the
         tempering subsystem's swap boundaries rely on (DESIGN.md
-        §Tempering).  Scan execution accepts a traced ``step0``; the
-        pallas executors need a concrete int (their chunk schedule and
-        Gibbs parity are compile-time static).
+        §Tempering).  Both executors accept a traced ``step0`` for
+        ``collect="all"``/``"last"`` — the fused pallas kernels take the
+        absolute-step base (and the Gibbs checkerboard parity it
+        carries) as a runtime operand, so segments at different offsets
+        reuse one compiled program; only ``"thin:<k>"`` needs a concrete
+        int (the kept count is shape-static).
 
         ``mh``: ``init_words`` is (B, C) for table targets (B independent
         targets x C lock-step chains), any shape for callable targets.

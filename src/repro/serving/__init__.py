@@ -12,11 +12,16 @@ chain axis of one engine program.  Three layers:
   * ``executor``   — the packed batch program (``PackedExecutor``): all
     slots advance ``chunk_steps`` in one device program; per-slot
     ``step0`` offsets keep every request's randomness stream exactly the
-    stream of its solo run, so joining mid-flight is bit-exact.
-  * ``dispatch``   — host/device overlap (``make_advance_fn``,
-    ``SegmentPipeline``): the carried (words, logp) state is donated to
-    the next segment while retirement bookkeeping for the previous one
-    runs on the host.
+    stream of its solo run, so joining mid-flight is bit-exact.  One
+    executor is one *shape class*: under scan execution heterogeneous
+    workloads join as ``lax.switch`` members of one flat-state program,
+    under pallas all slots fold into one batched fused-kernel grid.
+  * ``dispatch``   — the packed device programs + host/device overlap
+    (``make_class_advance_fn``, ``make_pallas_advance_fn``,
+    ``SegmentPipeline``, ``poison_donated``): the carried (words, logp)
+    state is donated to the next segment — and poisoned after dispatch
+    so stale reads fail loudly — while retirement bookkeeping for the
+    previous segment runs on the host.
 
 Entry points: ``python -m repro.launch.serve_engine`` (CLI) and
 ``benchmarks.bench_serving`` (requests/s + latency percentiles).

@@ -5,31 +5,51 @@ lock-step ``chunk_steps`` segments.  Admission and retirement happen
 only **between** chunks, and the packed batch is bit-identical to solo
 runs because each slot replays exactly the solo call:
 
-  * slot state is the engine carry ``(words, logp)`` with a leading
-    slot axis, donated segment-to-segment (serving/dispatch.py);
+  * slot state is the engine carry with a leading slot axis, donated
+    segment-to-segment (serving/dispatch.py) — stored *flat* (one
+    zero-padded uint32 vector per slot) under scan execution so
+    heterogeneous workload members share the pool, and shaped under
+    pallas (kernel geometry is per workload);
   * each slot streams from its *request's* key (``PRNGKey(seed)`` split
     exactly as ``launch.sample`` does), so the stream belongs to the
     request, never to the slot — slot reuse after retirement is safe by
     construction;
   * each slot carries its absolute step as the engine's ``step0`` resume
-    offset; the scan executors take it traced, so slots at different
-    absolute steps advance in one device program, and a request joining
-    mid-flight continues the exact stream its solo run would produce.
+    offset; both executors take it as a runtime value (the fused pallas
+    kernels as a per-slot operand), so slots at different absolute steps
+    advance in ONE device program and a request joining mid-flight
+    continues the exact stream its solo run would produce.
+
+**Shape classes**: one executor serves every workload member whose
+requests can share its compiled advance program.  Under scan execution
+the member table is open — ``add_member`` registers another workload
+and the class program dispatches per-slot via ``lax.switch``
+(dispatch.make_class_advance_fn), so a mixed ising+gmm burst fills one
+program's slot axis.  Under pallas execution the executor is a
+single-member class (one batched fused-kernel grid over all slots —
+dispatch.make_pallas_advance_fn; the historical one-solo-submit-per-slot
+fallback is gone).
 
 Per-request collection: the segment program collects ``"all"`` iff any
 active request keeps samples (else ``"last"`` — O(state) memory); a
 ``thin:k`` request then keeps the static strided slice of its slot's
 rows on *absolute* steps ``(step0 + t) % k == 0``, bit-identical to the
-engine's own ``thin`` stream (DESIGN.md §Collection).  Pallas execution
-bakes chunk schedules and Gibbs parity statically, so that path runs
-one solo ``engine.run`` per active slot with a concrete ``step0``
-instead of the vmapped single program.
+engine's own ``thin`` stream (DESIGN.md §Collection).
+
+Donation contract: retirement/collection slices MUST be enqueued before
+the next donating advance — and the executor *enforces* it by poisoning
+the donated carry buffers right after each dispatch
+(dispatch.poison_donated), so a stale read raises instead of silently
+observing reused memory.  ``advance_compiles`` counts compiled advance
+programs (jit-cache growth), the compiled-programs-per-burst number the
+serving benchmarks gate on.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import inspect
+import math
 import time
 
 import jax
@@ -38,10 +58,41 @@ import numpy as np
 
 from repro import telemetry, workloads
 from repro.samplers.engine import parse_collect, resolve_execution
-from repro.samplers.plan import RunPlan
-from repro.serving.dispatch import SegmentPipeline, make_advance_fn
+from repro.serving import dispatch
+from repro.serving.dispatch import SegmentPipeline
 
 _DUMMY_KEY = np.zeros((2,), np.uint32)  # free slots advance discarded work
+
+
+@dataclasses.dataclass(frozen=True)
+class _Member:
+    """One workload group inside a shape class: the (engine, target)
+    pair plus the request plumbing and this member's slot-state layout.
+    ``index`` is the member's branch position in the class program's
+    ``lax.switch`` table."""
+
+    name: str
+    engine: object
+    target: object
+    state_shape: tuple
+    request_init: object         # req -> (init_words, run_key, n_steps)
+    default_steps: int | None
+    index: int
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.state_shape))
+
+    @property
+    def carry_logp(self) -> bool:
+        return self.engine.config.update == "mh"
+
+    @property
+    def rate_label(self) -> str:
+        return (
+            "flip_rate" if self.engine.config.update == "gibbs"
+            else "acceptance_rate"
+        )
 
 
 @dataclasses.dataclass
@@ -49,6 +100,7 @@ class _Slot:
     """Executor-side bookkeeping for one admitted request."""
 
     req: object
+    member: _Member
     remaining: int               # steps still to run
     mode: str                    # parsed collect mode: all | thin | last
     thin_k: int                  # stride under thin
@@ -59,13 +111,63 @@ class _Slot:
     final_logp: object = None
 
 
+def _workload_member_parts(
+    name: str,
+    *,
+    randomness: str,
+    execution: str,
+    smoke: bool,
+    **builder_kwargs,
+):
+    """(engine, target, state_shape, request_init, default_steps) for a
+    workload group — engine + target built once (group key 0; for
+    seed-dependent targets like spin_glass the group fixes the problem
+    instance), requests supply per-request inits and streams.
+
+    ``request_init`` replays the solo-run derivation of ``launch.sample``
+    exactly: ``PRNGKey(seed)`` -> split -> (builder init from k_init,
+    chain stream from k_run) — so a packed request reproduces
+    ``engine.run(k_run, target, n, init)`` bit-for-bit.
+    """
+    builder = workloads.WORKLOADS[name]
+    params = inspect.signature(builder).parameters
+    kwargs = {
+        k: v
+        for k, v in dict(
+            randomness=randomness,
+            backend=execution,
+            smoke=smoke,
+            **builder_kwargs,
+        ).items()
+        if k in params and v is not None
+    }
+    template = workloads.build(name, jax.random.PRNGKey(0), **kwargs)
+
+    def request_init(req):
+        key = jax.random.PRNGKey(req.seed)
+        k_init, k_run = jax.random.split(key)
+        wl = workloads.build(name, k_init, **kwargs)
+        n = req.n_steps if req.n_steps else wl.n_steps
+        return wl.init_words, k_run, n
+
+    return (
+        template.engine,
+        template.target,
+        tuple(template.init_words.shape),
+        request_init,
+        template.n_steps,
+    )
+
+
 class PackedExecutor:
-    """``n_slots`` heterogeneous requests packed into one engine program.
+    """``n_slots`` heterogeneous requests packed into one device program.
 
     Construct via ``for_workload`` (the registry path the scheduler
     uses) or directly with an engine/target pair plus a
     ``request_init(req) -> (init_words, run_key, n_steps)`` callable
-    (the hook tests use to pin exact solo references).
+    (the hook tests use to pin exact solo references).  Additional
+    workload members join a scan-execution executor via
+    ``add_workload``/``add_member`` — the shape-class packing axis.
     """
 
     def __init__(
@@ -80,44 +182,68 @@ class PackedExecutor:
         chunk_steps: int | None = None,
         pipeline_depth: int = 2,
         clock=time.perf_counter,
+        workload: str = "default",
+        mesh=None,
     ):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self._check_engine(engine)
+        self.n_slots = int(n_slots)
+        self.chunk_steps = int(chunk_steps or engine.config.chunk_steps)
+        self.clock = clock
+        self.mesh = mesh
+        self.execution = resolve_execution(
+            engine.config.execution, target, engine.config.update
+        )
+        if mesh is not None and self.execution != "scan":
+            raise ValueError(
+                "mesh-sharded serving shards the slot axis of the scan "
+                "class program — pallas execution folds slots into one "
+                "kernel grid on a single device (use execution='scan' "
+                "with a mesh)"
+            )
+        self.members: list[_Member] = [
+            _Member(
+                name=workload, engine=engine, target=target,
+                state_shape=tuple(state_shape), request_init=request_init,
+                default_steps=default_steps, index=0,
+            )
+        ]
+        self.pipeline = SegmentPipeline(pipeline_depth)
+        self.advance_compiles = 0    # compiled advance programs (cache growth)
+        self._slots: list[_Slot | None] = [None] * self.n_slots
+        self._keys: list = [_DUMMY_KEY] * self.n_slots
+        if self.execution == "scan":
+            self.n_pad = self.members[0].size
+            self.words = jnp.zeros((self.n_slots, self.n_pad), jnp.uint32)
+            self.logp = jnp.zeros((self.n_slots, self.n_pad), jnp.float32)
+        else:
+            self.n_pad = self.members[0].size
+            self.words = jnp.zeros(
+                (self.n_slots, *self.members[0].state_shape), jnp.uint32
+            )
+            self.logp = None
+        self._rebuild_advance()
+
+    @staticmethod
+    def _check_engine(engine) -> None:
         if engine.config.num_chains != 1:
             raise ValueError(
                 "the serving tier packs requests into the batch itself — "
                 "configure the engine with num_chains=1 (got "
                 f"{engine.config.num_chains})"
             )
-        self.engine = engine
-        self.target = target
-        self.n_slots = int(n_slots)
-        self.state_shape = tuple(state_shape)
-        self.request_init = request_init
-        self.default_steps = default_steps
-        self.chunk_steps = int(chunk_steps or engine.config.chunk_steps)
-        self.clock = clock
-        self.execution = resolve_execution(
-            engine.config.execution, target, engine.config.update
-        )
-        self.rate_label = (
-            "flip_rate" if engine.config.update == "gibbs"
-            else "acceptance_rate"
-        )
-        # the carried logp feeds engine.run(init_logp=...) only on the
-        # scan MH path; gibbs and pallas re-derive it themselves
-        self._carry_logp = (
-            engine.config.update == "mh" and self.execution == "scan"
-        )
-        self.pipeline = SegmentPipeline(pipeline_depth)
-        self._advance = (
-            make_advance_fn(engine, target) if self.execution == "scan"
-            else None
-        )
-        self._slots: list[_Slot | None] = [None] * self.n_slots
-        self._keys: list = [_DUMMY_KEY] * self.n_slots
-        self.words = jnp.zeros((self.n_slots, *self.state_shape), jnp.uint32)
-        self.logp = jnp.zeros((self.n_slots, *self.state_shape), jnp.float32)
+
+    def _rebuild_advance(self) -> None:
+        if self.execution == "scan":
+            self._advance = dispatch.make_class_advance_fn(
+                self.members, self.n_pad, self.n_slots, mesh=self.mesh
+            )
+        else:
+            m = self.members[0]
+            self._advance = dispatch.make_pallas_advance_fn(
+                m.engine, m.target, m.state_shape
+            )
 
     # -- construction from the workload registry -----------------------
     @classmethod
@@ -132,51 +258,128 @@ class PackedExecutor:
         chunk_steps: int | None = None,
         pipeline_depth: int = 2,
         clock=time.perf_counter,
+        mesh=None,
         **builder_kwargs,
     ) -> "PackedExecutor":
-        """One executor per workload *group*: engine + target built once
-        (group key 0 — for seed-dependent targets like spin_glass the
-        group fixes the problem instance), requests supply per-request
-        inits and streams.
-
-        ``request_init`` replays the solo-run derivation of
-        ``launch.sample`` exactly: ``PRNGKey(seed)`` -> split ->
-        (builder init from k_init, chain stream from k_run) — so a
-        packed request reproduces ``engine.run(k_run, target, n, init)``
-        bit-for-bit.
-        """
-        builder = workloads.WORKLOADS[name]
-        params = inspect.signature(builder).parameters
-        kwargs = {
-            k: v
-            for k, v in dict(
-                randomness=randomness,
-                backend=execution,
-                smoke=smoke,
-                **builder_kwargs,
-            ).items()
-            if k in params and v is not None
-        }
-        template = workloads.build(name, jax.random.PRNGKey(0), **kwargs)
-
-        def request_init(req):
-            key = jax.random.PRNGKey(req.seed)
-            k_init, k_run = jax.random.split(key)
-            wl = workloads.build(name, k_init, **kwargs)
-            n = req.n_steps if req.n_steps else wl.n_steps
-            return wl.init_words, k_run, n
-
+        """An executor whose first member is workload ``name`` (see
+        ``_workload_member_parts`` for the per-request derivation)."""
+        engine, target, shape, request_init, default_steps = (
+            _workload_member_parts(
+                name, randomness=randomness, execution=execution,
+                smoke=smoke, **builder_kwargs,
+            )
+        )
         return cls(
-            template.engine,
-            template.target,
+            engine,
+            target,
             n_slots,
-            tuple(template.init_words.shape),
+            shape,
             request_init=request_init,
-            default_steps=template.n_steps,
+            default_steps=default_steps,
             chunk_steps=chunk_steps,
             pipeline_depth=pipeline_depth,
             clock=clock,
+            workload=name,
+            mesh=mesh,
         )
+
+    # -- shape-class membership ----------------------------------------
+    def member_for(self, workload: str | None) -> _Member:
+        """The member serving ``workload`` (single-member executors
+        accept any name — the direct-construction test path)."""
+        if len(self.members) == 1:
+            return self.members[0]
+        for m in self.members:
+            if m.name == workload:
+                return m
+        raise KeyError(
+            f"workload {workload!r} is not a member of this shape class "
+            f"({[m.name for m in self.members]})"
+        )
+
+    def has_member(self, workload: str) -> bool:
+        return any(m.name == workload for m in self.members)
+
+    def add_member(
+        self, name, engine, target, state_shape, request_init,
+        default_steps=None,
+    ) -> _Member:
+        """Register another workload group in this shape class (scan
+        execution only — pallas kernel geometry is per workload).  Live
+        slots keep advancing: the flat pool re-pads in place if the new
+        member's state is wider, and the class program is rebuilt with
+        the extended ``lax.switch`` table."""
+        if self.execution != "scan":
+            raise ValueError(
+                "pallas executors are single-member shape classes — the "
+                "fused kernel grid is specialised to one workload's "
+                "state geometry; mixed pallas bursts run one executor "
+                "(one program) per workload"
+            )
+        self._check_engine(engine)
+        if resolve_execution(
+            engine.config.execution, target, engine.config.update
+        ) != "scan":
+            raise ValueError(
+                "shape-class members must resolve to scan execution"
+            )
+        if self.has_member(name):
+            return self.member_for(name)
+        m = _Member(
+            name=name, engine=engine, target=target,
+            state_shape=tuple(state_shape), request_init=request_init,
+            default_steps=default_steps, index=len(self.members),
+        )
+        self.members.append(m)
+        if m.size > self.n_pad:
+            grow = m.size - self.n_pad
+            self.words = jnp.pad(self.words, ((0, 0), (0, grow)))
+            self.logp = jnp.pad(self.logp, ((0, 0), (0, grow)))
+            self.n_pad = m.size
+        self._rebuild_advance()
+        return m
+
+    def add_workload(
+        self,
+        name: str,
+        *,
+        randomness: str = "cim",
+        execution: str = "scan",
+        smoke: bool = True,
+        **builder_kwargs,
+    ) -> _Member:
+        """``add_member`` fed from the workload registry (the scheduler's
+        shape-class path)."""
+        parts = _workload_member_parts(
+            name, randomness=randomness, execution=execution, smoke=smoke,
+            **builder_kwargs,
+        )
+        return self.add_member(name, *parts)
+
+    # -- primary-member views (single-workload API compatibility) ------
+    @property
+    def engine(self):
+        return self.members[0].engine
+
+    @property
+    def target(self):
+        return self.members[0].target
+
+    @property
+    def state_shape(self) -> tuple:
+        return self.members[0].state_shape
+
+    @property
+    def request_init(self):
+        return self.members[0].request_init
+
+    @property
+    def default_steps(self):
+        return self.members[0].default_steps
+
+    @property
+    def rate_label(self) -> str:
+        return self.members[0].rate_label
 
     # -- slot pool ------------------------------------------------------
     def has_free_slot(self) -> bool:
@@ -193,27 +396,36 @@ class PackedExecutor:
             slot = next(i for i, s in enumerate(self._slots) if s is None)
         except StopIteration:
             raise RuntimeError("no free slot — check has_free_slot()") from None
-        init, k_run, n_steps = self.request_init(req)
+        member = self.member_for(getattr(req, "workload", None))
+        init, k_run, n_steps = member.request_init(req)
         init = jnp.asarray(init)
-        if tuple(init.shape) != self.state_shape:
+        if tuple(init.shape) != member.state_shape:
             raise ValueError(
-                f"request init shape {tuple(init.shape)} != executor state "
-                f"shape {self.state_shape} — one executor serves one "
+                f"request init shape {tuple(init.shape)} != member state "
+                f"shape {member.state_shape} — one member serves one "
                 f"workload group"
             )
         mode, k = parse_collect(req.collect)
         words0 = init.astype(jnp.uint32)
-        self.words = self.words.at[slot].set(words0)
-        if self._carry_logp:
-            self.logp = self.logp.at[slot].set(
-                self.target.log_prob(words0).astype(jnp.float32)
+        if self.execution == "scan":
+            flat = jnp.pad(
+                words0.reshape(-1), (0, self.n_pad - member.size)
             )
+            self.words = self.words.at[slot].set(flat)
+            if member.carry_logp:
+                lp0 = member.target.log_prob(words0).astype(jnp.float32)
+                self.logp = self.logp.at[slot].set(
+                    jnp.pad(lp0.reshape(-1), (0, self.n_pad - member.size))
+                )
+        else:
+            self.words = self.words.at[slot].set(words0)
         self._keys[slot] = jnp.asarray(k_run, jnp.uint32)
         self._slots[slot] = _Slot(
-            req=req, remaining=int(n_steps), mode=mode, thin_k=k
+            req=req, member=member, remaining=int(n_steps), mode=mode,
+            thin_k=k,
         )
         req.slot = slot
-        req.rate_label = self.rate_label
+        req.rate_label = member.rate_label
         req.t_admit = self.clock()
         return slot
 
@@ -256,9 +468,7 @@ class PackedExecutor:
             )
         return finished
 
-    def _advance_scan(self, active, seg: int) -> list:
-        """One vmapped device program over all slots, traced per-slot
-        ``step0``; donated (words, logp) carry."""
+    def _segment_inputs(self, active):
         collect = (
             "all"
             if any(self._slots[i].mode != "last" for i in active)
@@ -268,67 +478,96 @@ class PackedExecutor:
             [s.progress if s else 0 for s in self._slots], jnp.int32
         )
         keys = jnp.stack([jnp.asarray(k, jnp.uint32) for k in self._keys])
-        samples, words, logp, acc = self._advance(
-            self.words, self.logp, keys, step0s, seg=seg, collect=collect
+        return collect, step0s, keys
+
+    def _count_compiles(self, before: int) -> None:
+        grew = dispatch.jit_cache_size(self._advance) - before
+        if grew > 0:
+            self.advance_compiles += grew
+            telemetry.counter(
+                "serving_advance_compiles_total",
+                "compiled packed advance programs",
+            ).inc(grew, execution=self.execution)
+
+    def _advance_scan(self, active, seg: int) -> list:
+        """One vmapped class program over all slots: flat donated
+        (words, logp) carry, traced per-slot ``step0``, per-slot member
+        dispatch (dispatch.make_class_advance_fn)."""
+        collect, step0s, keys = self._segment_inputs(active)
+        tidx = jnp.asarray(
+            [s.member.index if s else 0 for s in self._slots], jnp.int32
         )
-        # slice retirement/collection payloads NOW — before the next
-        # segment donates (words, logp) back into the device program
+        old_words, old_logp = self.words, self.logp
+        before = dispatch.jit_cache_size(self._advance)
+        samples, words, logp, acc = self._advance(
+            old_words, old_logp, keys, step0s, tidx, seg=seg, collect=collect
+        )
+        self._count_compiles(before)
+        self.words, self.logp = words, logp
+        # the donated carries are dead from here on — make stale reads loud
+        dispatch.poison_donated(old_words, old_logp)
+
+        def rows(i, m):
+            return samples[i][:, :m.size].reshape(-1, *m.state_shape)
+
+        def unflat(buf, i, m):
+            return buf[i, :m.size].reshape(m.state_shape)
+
+        return self._bookkeep(
+            active, seg, collect, rows,
+            lambda i, m: unflat(acc, i, m),
+            lambda i, m: unflat(words, i, m),
+            lambda i, m: unflat(logp, i, m),
+        )
+
+    def _advance_pallas(self, active, seg: int) -> list:
+        """One batched fused-kernel grid over all slots: shaped donated
+        words carry, per-slot key words and operand ``step0``
+        (dispatch.make_pallas_advance_fn).  No per-slot fallback."""
+        collect, step0s, keys = self._segment_inputs(active)
+        old_words = self.words
+        before = dispatch.jit_cache_size(self._advance)
+        samples, words, logp, acc = self._advance(
+            old_words, keys, step0s, seg=seg, collect=collect
+        )
+        self._count_compiles(before)
+        self.words = words
+        dispatch.poison_donated(old_words)
+        return self._bookkeep(
+            active, seg, collect,
+            lambda i, m: samples[i],
+            lambda i, m: acc[i],
+            lambda i, m: words[i],
+            lambda i, m: logp[i],
+        )
+
+    def _bookkeep(
+        self, active, seg, collect, rows_of, acc_of, words_of, logp_of
+    ) -> list:
+        """Per-slot segment bookkeeping: slice retirement/collection
+        payloads NOW (the donated inputs are already poisoned — these
+        getters read the segment *outputs*), advance progress, collect
+        retirees."""
         retired = []
         for i in active:
             s = self._slots[i]
+            m = s.member
             if collect == "all" and s.mode != "last":
+                r = rows_of(i, m)
                 if s.mode == "all":
-                    s.pieces.append(samples[i])
+                    s.pieces.append(r)
                 else:  # thin: static strided slice on absolute steps
                     i0 = (-s.progress) % s.thin_k
                     if i0 < seg:
-                        s.pieces.append(samples[i, i0::s.thin_k])
-            s.acc = acc[i] if s.acc is None else s.acc + acc[i]
+                        s.pieces.append(r[i0::s.thin_k])
+            a = acc_of(i, m)
+            s.acc = a if s.acc is None else s.acc + a
             s.progress += seg
             s.remaining -= seg
             if s.remaining == 0:
-                s.final_words = words[i]
-                s.final_logp = logp[i]
+                s.final_words = words_of(i, m)
+                s.final_logp = logp_of(i, m)
                 retired.append(i)
-        self.words, self.logp = words, logp
-        return retired
-
-    def _advance_pallas(self, active, seg: int) -> list:
-        """Pallas fallback: one solo ``engine.run`` per active slot.  The
-        fused kernels bake the chunk schedule and checkerboard parity
-        statically, so ``step0`` must be a concrete int per slot — the
-        slots still share the between-chunks admission contract, just
-        not a single device program."""
-        retired = []
-        words = self.words
-        for i in active:
-            s = self._slots[i]
-            collect = (
-                "all" if s.mode == "all"
-                else f"thin:{s.thin_k}" if s.mode == "thin"
-                else "last"
-            )
-            res = self.engine.submit(
-                RunPlan(
-                    target=self.target, n_steps=seg, init_words=words[i],
-                    key=self._keys[i], step0=int(s.progress),
-                    collect=collect,
-                )
-            ).result
-            if s.mode != "last" and res.samples.shape[0]:
-                s.pieces.append(res.samples)
-            s.acc = (
-                res.accept_count if s.acc is None
-                else s.acc + res.accept_count
-            )
-            words = words.at[i].set(res.final_words)
-            s.progress += seg
-            s.remaining -= seg
-            if s.remaining == 0:
-                s.final_words = res.final_words
-                s.final_logp = res.final_logp
-                retired.append(i)
-        self.words = words
         return retired
 
     # -- retirement -----------------------------------------------------
@@ -366,11 +605,11 @@ class PackedExecutor:
                 [np.asarray(p) for p in s.pieces], axis=0
             )
         else:
-            req.samples = np.zeros((0, *self.state_shape), np.uint32)
+            req.samples = np.zeros((0, *s.member.state_shape), np.uint32)
         req.final_words = np.asarray(s.final_words)
         req.final_logp = np.asarray(s.final_logp)
         req.accept_count = np.asarray(s.acc)
-        total = max(1, s.progress * int(np.prod(self.state_shape)))
+        total = max(1, s.progress * int(np.prod(s.member.state_shape)))
         req.acceptance_rate = float(req.accept_count.sum()) / total
         req.t_done = self.clock()
 

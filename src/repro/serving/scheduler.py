@@ -127,13 +127,24 @@ class FIFOQueue:
 class Scheduler:
     """Packs a request stream into executor slots, FIFO, between chunks.
 
-    One ``PackedExecutor`` per distinct workload name, created on first
-    use with this scheduler's group settings (randomness / execution /
-    smoke / builder kwargs).  Seed-dependent *targets* (spin_glass
-    couplings) are fixed by the group — the service hosts one problem
-    instance and requests are independent chains on it; per-request
-    seeds drive the init and the chain stream (see
+    One ``PackedExecutor`` per **shape class**, created/extended on
+    first use with this scheduler's group settings (randomness /
+    execution / smoke / builder kwargs).  Under scan execution every
+    uint32-state workload shares ONE class — a new workload name joins
+    the existing executor as another ``lax.switch`` member, so a mixed
+    ising+gmm burst fills one compiled program's slot axis.  Under
+    pallas execution a class is one workload's kernel geometry, so
+    mixed bursts run one packed kernel program per workload (still one
+    program per class, never one per slot).  Seed-dependent *targets*
+    (spin_glass couplings) are fixed by the group — the service hosts
+    one problem instance and requests are independent chains on it;
+    per-request seeds drive the init and the chain stream (see
     ``PackedExecutor.for_workload``).
+
+    ``mesh`` (a concrete ``jax.sharding.Mesh``) shards the class
+    program's slot axis across devices through the "chains" sharding
+    rule — slots never communicate, so sharded serving is bit-identical
+    to unsharded (scan execution only).
     """
 
     def __init__(
@@ -146,6 +157,7 @@ class Scheduler:
         chunk_steps: int | None = None,
         pipeline_depth: int = 2,
         workload_kwargs: dict | None = None,
+        mesh=None,
     ):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
@@ -156,8 +168,10 @@ class Scheduler:
         self.chunk_steps = chunk_steps
         self.pipeline_depth = pipeline_depth
         self.workload_kwargs = dict(workload_kwargs or {})
+        self.mesh = mesh
         self.pending = FIFOQueue()
-        self.executors: dict[str, PackedExecutor] = {}
+        self.executors: dict[tuple, PackedExecutor] = {}   # by shape class
+        self._by_workload: dict[str, PackedExecutor] = {}
         self.done: list[ServeRequest] = []
         self._t0: float | None = None
         # optional telemetry.JsonlFlusher — the serve loop calls
@@ -176,8 +190,20 @@ class Scheduler:
     def submit(self, request: ServeRequest) -> None:
         self.pending.push(request, request.t_arrive)
 
+    def _class_key(self, workload: str) -> tuple:
+        """The shape-class identity a workload's requests pack under:
+        scan packs every uint32-state workload into one flat-state class
+        program; pallas classes are one workload's kernel geometry."""
+        if self.execution == "pallas":
+            return ("pallas", workload)
+        return ("scan", "uint32")
+
     def executor_for(self, workload: str) -> PackedExecutor:
-        ex = self.executors.get(workload)
+        ex = self._by_workload.get(workload)
+        if ex is not None:
+            return ex
+        key = self._class_key(workload)
+        ex = self.executors.get(key)
         if ex is None:
             ex = PackedExecutor.for_workload(
                 workload,
@@ -188,10 +214,32 @@ class Scheduler:
                 chunk_steps=self.chunk_steps,
                 pipeline_depth=self.pipeline_depth,
                 clock=self.clock,
+                mesh=self.mesh,
                 **self.workload_kwargs,
             )
-            self.executors[workload] = ex
+            self.executors[key] = ex
+        else:
+            ex.add_workload(
+                workload,
+                randomness=self.randomness,
+                execution=self.execution,
+                smoke=self.smoke,
+                **self.workload_kwargs,
+            )
+        self._by_workload[workload] = ex
         return ex
+
+    @property
+    def shape_classes(self) -> int:
+        """Distinct compiled class programs currently serving requests."""
+        return len(self.executors)
+
+    @property
+    def compiled_programs(self) -> int:
+        """Total compiled advance programs across all classes (jit-cache
+        growth — the compiled-programs-per-burst number the serving
+        bench gates)."""
+        return sum(ex.advance_compiles for ex in self.executors.values())
 
     @property
     def active(self) -> int:

@@ -164,8 +164,8 @@ class ReplicaExchange:
                             target=targets[r], n_steps=seg,
                             chain_id=chain_id + r,
                         )
-                    else:  # pallas: static step0; kernel traces cache on
-                        # (target, parity), not the offset, so eager is fine
+                    else:  # pallas: step0 rides as a kernel operand, so
+                        # traces cache on the target alone; eager is fine
                         res = engine.submit(
                             RunPlan(
                                 target=targets[r], n_steps=seg,

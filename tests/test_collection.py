@@ -202,6 +202,28 @@ class TestCollectEdges:
             np.asarray(eager.final_words),
         )
 
+    @pytest.mark.parametrize("update,randomness", [
+        ("mh", "cim"), ("mh", "fused"),
+        ("gibbs", "cim"), ("gibbs", "fused"),
+    ])
+    def test_pallas_accepts_traced_step0(self, update, randomness):
+        """Pallas executors take step0 as a runtime value (the fused
+        kernels as a per-slot operand), so a traced step0 works under
+        all/last — the serving tier's packed segments jit over it."""
+        target, init = _case(update)
+        engine = _engine(update, "pallas", randomness)
+        key = jax.random.PRNGKey(31)
+
+        traced = jax.jit(
+            lambda s: engine.run(
+                key, target, 8, init, step0=s, collect="all"
+            ).samples
+        )
+        eager = engine.run(key, target, 8, init, step0=5, collect="all")
+        np.testing.assert_array_equal(
+            np.asarray(traced(jnp.int32(5))), np.asarray(eager.samples)
+        )
+
 
 class TestOperandLeanRandomness:
     @pytest.mark.parametrize("name", ["host", "cim"])

@@ -161,8 +161,9 @@ class TestCollectInheritance:
 
 class TestPallasServing:
     def test_pallas_slots_match_solo(self):
-        """The pallas path (per-slot programs, concrete step0) honours
-        the same packing invariant (interpret mode on CPU)."""
+        """The pallas path (one batched kernel grid over all slots,
+        per-slot operand step0) honours the same packing invariant
+        (interpret mode on CPU)."""
         ex = make_executor("gmm", n_slots=2, chunk_steps=8,
                            execution="pallas")
         a = ServeRequest(rid=0, workload="gmm", n_steps=16, seed=1,
@@ -178,6 +179,247 @@ class TestPallasServing:
         assert_matches_solo(
             b, solo_run("gmm", 2, 8, "last", execution="pallas")
         )
+
+
+class TestShapeClassPacking:
+    """Scan execution packs heterogeneous workloads into ONE executor
+    (one compiled class program with a per-slot ``lax.switch``)."""
+
+    def test_mixed_burst_shares_one_class_program(self):
+        sched = Scheduler(n_slots=4, smoke=True, chunk_steps=8)
+        reqs = [
+            ServeRequest(rid=0, workload="gmm", n_steps=16, seed=1,
+                         collect="all"),
+            ServeRequest(rid=1, workload="ising", n_steps=12, seed=2,
+                         collect="all"),
+            ServeRequest(rid=2, workload="gmm", n_steps=24, seed=3,
+                         collect="last"),
+            ServeRequest(rid=3, workload="ising", n_steps=8, seed=4,
+                         collect="last"),
+        ]
+        done = sched.serve(reqs)
+        assert len(done) == 4
+        # one shape class: gmm and ising share one packed program
+        assert sched.shape_classes == 1
+        assert len(sched.executors) == 1
+        by_rid = {r.rid: r for r in done}
+        assert_matches_solo(by_rid[0], solo_run("gmm", 1, 16, "all"))
+        assert_matches_solo(by_rid[1], solo_run("ising", 2, 12, "all"))
+        assert_matches_solo(by_rid[2], solo_run("gmm", 3, 24, "last"))
+        assert_matches_solo(by_rid[3], solo_run("ising", 4, 8, "last"))
+        assert by_rid[1].rate_label == "flip_rate"
+        assert by_rid[0].rate_label == "acceptance_rate"
+
+    def test_mixed_mid_flight_join_is_bit_exact(self):
+        """An ising request joining a class program mid-flight (while a
+        gmm request is 16 steps in) must stream exactly its solo run —
+        the switch member table extends without touching live slots."""
+        ex = make_executor("gmm", n_slots=2, chunk_steps=8)
+        ex.add_workload("ising", randomness="cim", execution="scan",
+                        smoke=True)
+        a = ServeRequest(rid=0, workload="gmm", n_steps=40, seed=1,
+                         collect="all")
+        ex.admit(a)
+        for _ in range(2):
+            ex.advance_chunk()
+        b = ServeRequest(rid=1, workload="ising", n_steps=16, seed=2,
+                         collect="all")
+        ex.admit(b)
+        done = run_to_completion(ex)
+        assert {r.rid for r in done} == {0, 1}
+        assert_matches_solo(a, solo_run("gmm", 1, 40, "all"))
+        assert_matches_solo(b, solo_run("ising", 2, 16, "all"))
+
+    def test_add_member_while_live_grows_pad(self):
+        """Registering a wider member mid-run re-pads the flat slot pool
+        in place without perturbing the narrower live request."""
+        ex = make_executor("gmm", n_slots=2, chunk_steps=8)
+        a = ServeRequest(rid=0, workload="gmm", n_steps=24, seed=5,
+                         collect="all")
+        ex.admit(a)
+        ex.advance_chunk()
+        pad_before = ex.n_pad
+        ex.add_workload("ising", randomness="cim", execution="scan",
+                        smoke=True)
+        assert ex.n_pad >= pad_before
+        run_to_completion(ex)
+        assert_matches_solo(a, solo_run("gmm", 5, 24, "all"))
+
+
+class TestPackedPallas:
+    """Pallas execution: every slot folds into ONE batched fused-kernel
+    grid (no per-slot fallback) with per-slot operand step0."""
+
+    @pytest.mark.parametrize("randomness", ["host", "fused"])
+    def test_gmm_mid_flight_join_matches_solo(self, randomness):
+        ex = make_executor("gmm", n_slots=2, chunk_steps=8,
+                           randomness=randomness, execution="pallas")
+        a = ServeRequest(rid=0, workload="gmm", n_steps=32, seed=1,
+                         collect="all")
+        ex.admit(a)
+        ex.advance_chunk()
+        b = ServeRequest(rid=1, workload="gmm", n_steps=16, seed=2,
+                         collect="all")
+        ex.admit(b)
+        done = run_to_completion(ex)
+        assert {r.rid for r in done} == {0, 1}
+        assert_matches_solo(a, solo_run(
+            "gmm", 1, 32, "all", randomness=randomness, execution="pallas"
+        ))
+        assert_matches_solo(b, solo_run(
+            "gmm", 2, 16, "all", randomness=randomness, execution="pallas"
+        ))
+
+    @pytest.mark.parametrize("randomness", ["cim", "fused"])
+    def test_ising_mid_flight_join_matches_solo(self, randomness):
+        """Gibbs slots fold into the lattice-batch axis; a mid-flight
+        join must resume on the right checkerboard colour (the operand
+        step0 carries parity into the packed kernel)."""
+        ex = make_executor("ising", n_slots=2, chunk_steps=4,
+                           randomness=randomness, execution="pallas")
+        a = ServeRequest(rid=0, workload="ising", n_steps=20, seed=3,
+                         collect="all")
+        ex.admit(a)
+        ex.advance_chunk()
+        b = ServeRequest(rid=1, workload="ising", n_steps=12, seed=4,
+                         collect="all")
+        ex.admit(b)
+        done = run_to_completion(ex)
+        assert {r.rid for r in done} == {0, 1}
+        assert_matches_solo(a, solo_run(
+            "ising", 3, 20, "all", randomness=randomness,
+            execution="pallas",
+        ))
+        assert_matches_solo(b, solo_run(
+            "ising", 4, 12, "all", randomness=randomness,
+            execution="pallas",
+        ))
+
+    def test_mixed_pallas_burst_one_program_per_workload(self):
+        """A mixed ising+gmm pallas burst runs one packed program per
+        workload geometry (two shape classes — never one per slot)."""
+        sched = Scheduler(n_slots=2, randomness="fused",
+                          execution="pallas", smoke=True, chunk_steps=8)
+        reqs = [
+            ServeRequest(rid=0, workload="gmm", n_steps=16, seed=1,
+                         collect="all"),
+            ServeRequest(rid=1, workload="ising", n_steps=12, seed=2,
+                         collect="all"),
+            ServeRequest(rid=2, workload="gmm", n_steps=8, seed=3,
+                         collect="last"),
+        ]
+        done = sched.serve(reqs)
+        assert len(done) == 3
+        assert sched.shape_classes == 2   # one per kernel geometry
+        by_rid = {r.rid: r for r in done}
+        assert_matches_solo(by_rid[0], solo_run(
+            "gmm", 1, 16, "all", randomness="fused", execution="pallas"
+        ))
+        assert_matches_solo(by_rid[1], solo_run(
+            "ising", 2, 12, "all", randomness="fused", execution="pallas"
+        ))
+        assert_matches_solo(by_rid[2], solo_run(
+            "gmm", 3, 8, "last", randomness="fused", execution="pallas"
+        ))
+
+    def test_packed_pallas_matches_packed_scan(self):
+        """The same burst through packed pallas and packed scan yields
+        identical streams (the engine's cross-execution bit-parity
+        survives packing)."""
+        reqs = lambda: [
+            ServeRequest(rid=0, workload="gmm", n_steps=16, seed=7,
+                         collect="all"),
+            ServeRequest(rid=1, workload="ising", n_steps=12, seed=8,
+                         collect="all"),
+        ]
+        done_p = Scheduler(
+            n_slots=2, randomness="fused", execution="pallas",
+            smoke=True, chunk_steps=8,
+        ).serve(reqs())
+        done_s = Scheduler(
+            n_slots=2, randomness="fused", execution="scan",
+            smoke=True, chunk_steps=8,
+        ).serve(reqs())
+        bp = {r.rid: r for r in done_p}
+        bs = {r.rid: r for r in done_s}
+        for rid in (0, 1):
+            np.testing.assert_array_equal(bp[rid].samples, bs[rid].samples)
+            np.testing.assert_array_equal(
+                bp[rid].final_words, bs[rid].final_words
+            )
+
+
+class TestDonationGuard:
+    def test_stale_carry_read_raises(self):
+        """The donation contract is enforced: a reference to the slot
+        carry taken before an advance is poisoned by the dispatch and
+        raises on read instead of silently showing donated memory."""
+        ex = make_executor("gmm", n_slots=2, chunk_steps=8)
+        r = ServeRequest(rid=0, workload="gmm", n_steps=16, seed=1,
+                         collect="last")
+        ex.admit(r)
+        stale = ex.words
+        ex.advance_chunk()
+        assert stale.is_deleted()
+        with pytest.raises(RuntimeError):
+            np.asarray(stale)
+        run_to_completion(ex)
+        # the request itself is untouched by the poisoning
+        ref = solo_run("gmm", 1, 16, "last")
+        np.testing.assert_array_equal(
+            r.final_words, np.asarray(ref.final_words)
+        )
+
+    def test_pallas_carry_poisoned_too(self):
+        ex = make_executor("gmm", n_slots=1, chunk_steps=8,
+                           execution="pallas")
+        r = ServeRequest(rid=0, workload="gmm", n_steps=16, seed=2,
+                         collect="last")
+        ex.admit(r)
+        stale = ex.words
+        ex.advance_chunk()
+        assert stale.is_deleted()
+        run_to_completion(ex)
+
+
+class TestMeshServingSmoke:
+    def test_one_device_mesh_matches_unsharded(self):
+        """Scheduler(mesh=...) routes the class program through
+        shard_map over the slot axis; on a 1-device mesh the wrapped
+        program must be bit-identical (the 4-device case lives in
+        test_multidevice.py)."""
+        mesh = jax.sharding.Mesh(
+            np.asarray(jax.devices()[:1]), ("data",)
+        )
+        reqs = lambda: [
+            ServeRequest(rid=0, workload="gmm", n_steps=16, seed=1,
+                         collect="all"),
+            ServeRequest(rid=1, workload="ising", n_steps=12, seed=2,
+                         collect="all"),
+        ]
+        done_m = Scheduler(
+            n_slots=2, smoke=True, chunk_steps=8, mesh=mesh
+        ).serve(reqs())
+        done_u = Scheduler(
+            n_slots=2, smoke=True, chunk_steps=8
+        ).serve(reqs())
+        bm = {r.rid: r for r in done_m}
+        bu = {r.rid: r for r in done_u}
+        for rid in (0, 1):
+            np.testing.assert_array_equal(bm[rid].samples, bu[rid].samples)
+            np.testing.assert_array_equal(
+                bm[rid].final_words, bu[rid].final_words
+            )
+
+    def test_mesh_rejects_pallas(self):
+        mesh = jax.sharding.Mesh(
+            np.asarray(jax.devices()[:1]), ("data",)
+        )
+        with pytest.raises(ValueError, match="mesh"):
+            PackedExecutor.for_workload(
+                "gmm", n_slots=2, execution="pallas", smoke=True,
+                mesh=mesh,
+            )
 
 
 class TestFIFOQueue:
